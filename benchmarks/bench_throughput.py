@@ -1,0 +1,59 @@
+"""Training + serving throughput on a reduced model (CPU numbers — the
+relative LK-vs-naive serving comparison is the paper-relevant figure)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.distributed import ShardCtx
+from repro.models import build
+from repro.serving import ServingEngine
+from repro.training import init_state, make_train_step, opt_config_for
+
+
+def run() -> list[str]:
+    rows = []
+    cfg = get_config("llama3-8b").reduced()
+
+    # --- training throughput ---
+    model = build(cfg, ShardCtx.single())
+    ocfg = opt_config_for(cfg, lr=1e-3)
+    params, opt = init_state(model, ocfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, ocfg), donate_argnums=(0, 1))
+    B, S = 8, 128
+    ds = SyntheticLM(cfg.vocab_size, 0)
+    batch = {"tokens": jnp.asarray(ds.batch(0, B, S))}
+    params, opt, m = step(params, opt, batch)          # compile
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    n = 10
+    for i in range(n):
+        params, opt, m = step(params, opt, batch)
+    jax.block_until_ready(m)
+    dt = time.perf_counter() - t0
+    rows.append(f"train_step_us,{dt/n*1e6:.0f},tokens_per_s="
+                f"{B*S*n/dt:.0f}")
+
+    # --- serving throughput (persistent engine) ---
+    model2 = build(cfg, ShardCtx.single(kind="decode"))
+    p2 = model2.init(jax.random.key(0))
+    eng = ServingEngine(model2, p2, max_batch=8, max_seq=96)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 8) for _ in range(8)]
+    eng.generate(prompts[:1], max_new_tokens=2)        # warm
+    t0 = time.perf_counter()
+    outs = eng.generate(prompts, max_new_tokens=32)
+    dt = time.perf_counter() - t0
+    toks = sum(len(o) for o in outs)
+    st = eng.tracker.stats["trigger"]
+    rows.append(f"serve_decode_step_us,{eng.tracker.avg('wait')/1e3:.0f},"
+                f"tokens_per_s={toks/dt:.0f}")
+    rows.append(f"serve_trigger_us,{st.avg_ns/1e3:.1f},"
+                f"worst_us={st.worst_ns/1e3:.1f}")
+    eng.dispose()
+    return rows

@@ -1,0 +1,29 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#
+#   bench_dispatch    -> paper Tables II (avg) & III (worst): LK vs
+#                        traditional phase costs, single-cluster & full
+#   bench_throughput  -> train/serve throughput of the persistent stack
+#   bench_kernels     -> flash-vs-masked attention, executor dispatch rate
+#
+# Roofline terms come from the dry-run (python -m repro.launch.roofline),
+# not from wall time — this container is CPU-only.
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import bench_dispatch, bench_kernels, bench_throughput
+    print("name,us_per_call,derived")
+    for mod in (bench_dispatch, bench_throughput, bench_kernels):
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:  # pragma: no cover — keep the harness going
+            traceback.print_exc()
+            print(f"{mod.__name__},ERROR,{type(e).__name__}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""The paper's scenario end-to-end: a persistent serving engine with
+mailbox-dispatched work, EDF deadlines, and WCET (avg vs worst) reporting.
+
+Compares the LK persistent path against the traditional re-staging path —
+the Table II/III experiment on a real model.
+
+    PYTHONPATH=src python examples/serve_persistent.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import mailbox as mb
+from repro.core.persistent import TraditionalRuntime
+from repro.distributed import ShardCtx
+from repro.models import build
+from repro.serving import ServingEngine
+
+
+def main():
+    cfg = get_config("mamba2-780m").reduced()     # O(1)-state: LK's best case
+    model = build(cfg, ShardCtx.single(kind="decode"))
+    params = model.init(jax.random.key(0))
+
+    engine = ServingEngine(model, params, max_batch=4, max_seq=128)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, int(rng.integers(4, 20)))
+               for _ in range(10)]
+    t0 = time.perf_counter()
+    outs = engine.generate(prompts, max_new_tokens=24)
+    dt = time.perf_counter() - t0
+    n_tokens = sum(len(o) for o in outs)
+    print(f"served {len(prompts)} requests / {n_tokens} tokens "
+          f"in {dt:.2f}s ({n_tokens/dt:.0f} tok/s, continuous batching "
+          f"over {engine.max_batch} slots)")
+
+    print("\nLK phase profile (paper Tables II/III analogue):")
+    print(f"{'phase':10s} {'avg':>12s} {'worst':>12s} {'jitter':>12s}")
+    for phase in ("init", "trigger", "wait", "dispose"):
+        if phase not in engine.tracker.stats:
+            continue
+        s = engine.tracker.stats[phase]
+        print(f"{phase:10s} {s.avg_ns/1e3:10.1f}us {s.worst_ns/1e3:10.1f}us "
+              f"{(s.worst_ns-s.avg_ns)/1e3:10.1f}us")
+
+    # --- traditional arm: full weight re-staging per step ---
+    def naive_decode(state, desc):
+        logits, caches = model.decode_step(
+            state["params"], state["caches"], state["tokens"],
+            state["lengths"])
+        nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+        return dict(state, caches=caches, tokens=nxt[:, None],
+                    lengths=state["lengths"] + 1), nxt
+
+    tr = TraditionalRuntime(
+        [("decode", naive_decode)],
+        result_template=jnp.zeros((4,), jnp.int32))
+    tr.boot({"params": params, "caches": model.init_caches(4, 128),
+             "tokens": jnp.ones((4, 1), jnp.int32),
+             "lengths": jnp.ones((4,), jnp.int32)})
+    for i in range(20):
+        tr.launch("decode", mb.WorkDescriptor(opcode=0, request_id=i))
+    s_lk = engine.tracker.stats["trigger"]
+    s_tr = tr.tracker.stats["trigger"]
+    print(f"\nTrigger: LK {s_lk.avg_ns/1e3:.0f}us vs traditional "
+          f"{s_tr.avg_ns/1e3:.0f}us -> {s_tr.avg_ns/max(s_lk.avg_ns,1):.1f}x "
+          f"(paper reports 10x on GTX980)")
+    tr.dispose()
+    engine.dispose()
+
+
+if __name__ == "__main__":
+    main()

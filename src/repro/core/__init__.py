@@ -1,0 +1,14 @@
+# The paper's primary contribution: the LightKernel persistent execution
+# model (mailbox protocol, persistent runtime, cluster pinning, WCET
+# accounting), adapted to TPU/JAX per DESIGN.md §2.
+from repro.core import mailbox
+from repro.core.clusters import Cluster, ClusterManager, make_cluster_mesh
+from repro.core.dispatcher import AdmissionError, Completion, Dispatcher
+from repro.core.persistent import PersistentRuntime, TraditionalRuntime
+from repro.core.wcet import WcetTracker
+
+__all__ = [
+    "mailbox", "Cluster", "ClusterManager", "make_cluster_mesh",
+    "AdmissionError", "Completion", "Dispatcher",
+    "PersistentRuntime", "TraditionalRuntime", "WcetTracker",
+]

@@ -1,0 +1,120 @@
+"""Cluster management: carve the device fleet into disjoint submeshes.
+
+The paper pins work to specific GPU clusters (SMs) for spatial isolation; our
+clusters are disjoint submeshes of the pod — collectives compiled against a
+cluster's mesh can only touch that cluster's devices, giving the same
+isolation property at pod scale. ``recarve`` rebuilds clusters after node
+failures (elastic scaling).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclass
+class Cluster:
+    cid: int
+    devices: np.ndarray          # flat device array
+    mesh: Mesh
+    healthy: bool = True
+
+    @property
+    def n_devices(self) -> int:
+        return int(self.devices.size)
+
+
+def _best_2d(n: int) -> tuple[int, int]:
+    """Most-square (a, b) with a*b == n, a <= b."""
+    a = int(math.isqrt(n))
+    while n % a:
+        a -= 1
+    return a, n // a
+
+
+def make_cluster_mesh(devices: Sequence, axis_names=("data", "model"),
+                      shape: Optional[tuple] = None) -> Mesh:
+    devs = np.asarray(devices, dtype=object).reshape(-1)
+    n = devs.size
+    if shape is None:
+        if len(axis_names) == 1:
+            shape = (n,)
+        elif len(axis_names) == 2:
+            shape = _best_2d(n)
+        else:
+            raise ValueError("provide explicit shape for >2 axes")
+    assert math.prod(shape) == n, (shape, n)
+    return Mesh(devs.reshape(shape), axis_names)
+
+
+class ClusterManager:
+    def __init__(self, devices: Optional[Sequence] = None,
+                 n_clusters: int = 1,
+                 axis_names=("data", "model"),
+                 cluster_shape: Optional[tuple] = None):
+        self.all_devices = list(devices if devices is not None
+                                else jax.devices())
+        self.axis_names = axis_names
+        self.cluster_shape = cluster_shape
+        self.clusters: list[Cluster] = []
+        self.generation = 0
+        self._carve(self.all_devices, n_clusters)
+
+    # ------------------------------------------------------------------
+    def _carve(self, devices: Sequence, n_clusters: int) -> None:
+        n = len(devices)
+        assert n_clusters >= 1
+        per = n // n_clusters
+        assert per >= 1, f"{n} devices cannot host {n_clusters} clusters"
+        used = per * n_clusters
+        self.clusters = []
+        for cid in range(n_clusters):
+            devs = np.asarray(devices[cid * per:(cid + 1) * per], dtype=object)
+            mesh = make_cluster_mesh(devs, self.axis_names, self.cluster_shape)
+            self.clusters.append(Cluster(cid=cid, devices=devs, mesh=mesh))
+        self.spare_devices = list(devices[used:])
+        self.generation += 1
+
+    # ------------------------------------------------------------------
+    def healthy_clusters(self) -> list[Cluster]:
+        return [c for c in self.clusters if c.healthy]
+
+    def mark_failed(self, cid: int) -> None:
+        self.clusters[cid].healthy = False
+
+    def recarve(self, n_clusters: Optional[int] = None) -> list[Cluster]:
+        """Elastic rebuild from devices of still-healthy clusters (plus
+        spares). Called by the dispatcher after failures."""
+        devices = [d for c in self.healthy_clusters() for d in c.devices]
+        devices += self.spare_devices
+        if not devices:
+            raise RuntimeError("no healthy devices left")
+        if n_clusters is None:
+            n_clusters = max(1, len(self.healthy_clusters()))
+        self._carve(devices, n_clusters)
+        return self.clusters
+
+    # ------------------------------------------------------------------
+    def check_disjoint(self) -> bool:
+        seen = set()
+        for c in self.clusters:
+            for d in c.devices:
+                if id(d) in seen:
+                    return False
+                seen.add(id(d))
+        return True
+
+    def coverage(self) -> float:
+        used = sum(c.n_devices for c in self.clusters)
+        return used / max(len(self.all_devices), 1)
+
+    def pin_map(self, classes: Sequence[str]) -> dict[str, int]:
+        """Pin request classes to clusters round-robin (paper: allocate work
+        on a specific subset of cores)."""
+        cl = self.healthy_clusters()
+        return {cls: cl[i % len(cl)].cid for i, cls in enumerate(classes)}

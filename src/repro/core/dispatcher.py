@@ -1,0 +1,177 @@
+"""Host-side dispatcher: per-cluster EDF queues, deadline admission control,
+straggler detection, failure handling.
+
+Real-time semantics follow the paper's design goals (§II-A): worst-case
+driven admission (WCET estimates, not averages), spatial pinning of work
+classes to clusters, and accounting of the avg↔worst gap.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.core import mailbox as mb
+from repro.core.persistent import PersistentRuntime
+from repro.core.wcet import WcetTracker
+
+
+def now_us() -> int:
+    return time.perf_counter_ns() // 1000
+
+
+class AdmissionError(RuntimeError):
+    pass
+
+
+@dataclass(order=True)
+class _Item:
+    deadline_us: int
+    seq: int
+    desc: mb.WorkDescriptor = field(compare=False)
+    submitted_us: int = field(compare=False, default=0)
+
+
+@dataclass
+class Completion:
+    request_id: int
+    cluster: int
+    result: Any
+    queued_us: int
+    service_us: int
+    deadline_us: int
+    met_deadline: bool
+
+
+class Dispatcher:
+    """EDF dispatcher over persistent per-cluster runtimes."""
+
+    def __init__(self, runtimes: dict[int, PersistentRuntime],
+                 wcet_us: Optional[dict[int, float]] = None,
+                 straggler_factor: float = 4.0,
+                 on_failure: Optional[Callable[[int], None]] = None):
+        self.runtimes = dict(runtimes)
+        self.queues: dict[int, list[_Item]] = {c: [] for c in runtimes}
+        # WCET estimate per opcode (µs) — seeded by caller, refined online
+        self.wcet_us = dict(wcet_us or {})
+        self._observed: dict[int, list[float]] = {}
+        self.straggler_factor = straggler_factor
+        self.on_failure = on_failure
+        self.completions: list[Completion] = []
+        self.rejected = 0
+        self.stragglers: list[tuple[int, int, float]] = []
+        self._seq = itertools.count()
+        self._pins: dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    def pin(self, request_class: str, cluster: int) -> None:
+        self._pins[request_class] = cluster
+
+    def _estimate_us(self, opcode: int) -> float:
+        if opcode in self._observed and self._observed[opcode]:
+            return float(np.max(self._observed[opcode]))   # observed worst
+        return float(self.wcet_us.get(opcode, 1000.0))
+
+    # ------------------------------------------------------------------
+    def submit(self, desc: mb.WorkDescriptor, cluster: Optional[int] = None,
+               request_class: Optional[str] = None,
+               admission: bool = True) -> int:
+        """EDF-enqueue; returns cluster id. Raises AdmissionError when the
+        deadline cannot be met under worst-case estimates."""
+        if cluster is None and request_class is not None:
+            cluster = self._pins.get(request_class)
+        if cluster is None:
+            cluster = min(self.queues, key=lambda c: len(self.queues[c]))
+        if not self.runtimes[cluster]:
+            raise KeyError(cluster)
+
+        if admission and desc.deadline_us:
+            load_us = self._estimate_us(desc.opcode)
+            for it in self.queues[cluster]:
+                if it.deadline_us <= desc.deadline_us:
+                    load_us += self._estimate_us(it.desc.opcode)
+            if now_us() + load_us > desc.deadline_us:
+                self.rejected += 1
+                raise AdmissionError(
+                    f"deadline {desc.deadline_us} unattainable "
+                    f"(worst-case load {load_us:.0f}µs)")
+        item = _Item(deadline_us=desc.deadline_us or 2**62,
+                     seq=next(self._seq), desc=desc, submitted_us=now_us())
+        heapq.heappush(self.queues[cluster], item)
+        return cluster
+
+    # ------------------------------------------------------------------
+    def pump(self, cluster: int) -> Optional[Completion]:
+        """Run the earliest-deadline item on `cluster`; returns completion."""
+        q = self.queues[cluster]
+        if not q:
+            return None
+        item = heapq.heappop(q)
+        rt = self.runtimes[cluster]
+        t0 = now_us()
+        try:
+            rt.trigger(item.desc)
+            result, _ = rt.wait()
+        except Exception:
+            self._handle_failure(cluster, item)
+            raise
+        service = now_us() - t0
+        obs = self._observed.setdefault(item.desc.opcode, [])
+        obs.append(service)
+        if len(obs) > 256:
+            del obs[0]
+        avg = float(np.mean(obs))
+        if len(obs) >= 8 and service > self.straggler_factor * avg:
+            self.stragglers.append((cluster, item.desc.request_id, service))
+        comp = Completion(
+            request_id=item.desc.request_id, cluster=cluster, result=result,
+            queued_us=t0 - item.submitted_us, service_us=service,
+            deadline_us=item.desc.deadline_us,
+            met_deadline=(not item.desc.deadline_us
+                          or now_us() <= item.desc.deadline_us))
+        self.completions.append(comp)
+        return comp
+
+    def drain(self) -> list[Completion]:
+        """Round-robin pump until all queues are empty."""
+        done = []
+        while any(self.queues.values()):
+            for c in list(self.queues):
+                comp = self.pump(c)
+                if comp:
+                    done.append(comp)
+        return done
+
+    # ------------------------------------------------------------------
+    def _handle_failure(self, cluster: int, item: _Item) -> None:
+        """Re-queue in-flight + queued work of a failed cluster elsewhere.
+        Descriptors are pure functions of request state — idempotent replay."""
+        pending = [item] + [heapq.heappop(self.queues[cluster])
+                            for _ in range(len(self.queues[cluster]))]
+        del self.queues[cluster]
+        del self.runtimes[cluster]
+        if self.on_failure:
+            self.on_failure(cluster)
+        if not self.queues:
+            raise RuntimeError("all clusters failed")
+        for it in pending:
+            tgt = min(self.queues, key=lambda c: len(self.queues[c]))
+            heapq.heappush(self.queues[tgt], it)
+
+    # ------------------------------------------------------------------
+    def deadline_stats(self) -> dict:
+        if not self.completions:
+            return {"n": 0}
+        services = np.array([c.service_us for c in self.completions])
+        return {
+            "n": len(self.completions),
+            "met": sum(c.met_deadline for c in self.completions),
+            "rejected": self.rejected,
+            "avg_service_us": float(services.mean()),
+            "worst_service_us": float(services.max()),
+            "stragglers": len(self.stragglers),
+        }

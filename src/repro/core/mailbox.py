@@ -1,0 +1,121 @@
+"""LightKernel dual-mailbox protocol (paper Table I), adapted to TPU.
+
+Each cluster owns a mailbox pair:
+  * ``to_gpu``   — host → device: NOP / EXIT / WORK(+work id)
+  * ``from_gpu`` — device → host: INIT / FINISHED / WORKING
+
+Statuses keep the paper's exact values. On TPU the mailbox is a small int32
+descriptor vector transferred once per step (the paper was likewise forced to
+transfer the full mailbox to dodge the PCIe small-transfer pathology, §II-D).
+
+Descriptor layout (DESC_WIDTH int32 words per cluster):
+  [0] status word        (THREAD_NOP / THREAD_EXIT / THREAD_WORK + work_id)
+  [1] opcode             (index into the runtime's registered work table)
+  [2] arg0  [3] arg1     (work-specific, e.g. slot index / token count)
+  [4] seq_len
+  [5] request_id
+  [6] deadline_lo  [7] deadline_hi   (u64 microseconds, split)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+# --- paper Table I: persistent thread statuses --------------------------------
+THREAD_INIT = 0        # from_GPU
+THREAD_FINISHED = 1    # from_GPU
+THREAD_WORKING = 2     # from_GPU
+THREAD_NOP = 4         # both directions
+THREAD_EXIT = 8        # to_GPU
+THREAD_WORK = 16       # to_GPU: values >= 16 encode 16 + work_id
+
+DESC_WIDTH = 8
+
+# descriptor word indices
+W_STATUS, W_OPCODE, W_ARG0, W_ARG1, W_SEQLEN, W_REQID, W_DL_LO, W_DL_HI = range(8)
+
+
+@dataclass(frozen=True)
+class WorkDescriptor:
+    work_id: int = 0
+    opcode: int = 0
+    arg0: int = 0
+    arg1: int = 0
+    seq_len: int = 0
+    request_id: int = 0
+    deadline_us: int = 0           # absolute deadline, microseconds
+
+    def encode(self) -> np.ndarray:
+        d = np.zeros(DESC_WIDTH, np.int32)
+        d[W_STATUS] = THREAD_WORK + self.work_id
+        d[W_OPCODE] = self.opcode
+        d[W_ARG0] = self.arg0
+        d[W_ARG1] = self.arg1
+        d[W_SEQLEN] = self.seq_len
+        d[W_REQID] = self.request_id
+        d[W_DL_LO] = np.uint32(self.deadline_us & 0xFFFFFFFF).view(np.int32)
+        d[W_DL_HI] = np.uint32((self.deadline_us >> 32) & 0xFFFFFFFF).view(np.int32)
+        return d
+
+
+def nop_descriptor() -> np.ndarray:
+    d = np.zeros(DESC_WIDTH, np.int32)
+    d[W_STATUS] = THREAD_NOP
+    return d
+
+
+def exit_descriptor() -> np.ndarray:
+    d = np.zeros(DESC_WIDTH, np.int32)
+    d[W_STATUS] = THREAD_EXIT
+    return d
+
+
+def decode(desc) -> WorkDescriptor:
+    d = np.asarray(desc)
+    status = int(d[W_STATUS])
+    work_id = status - THREAD_WORK if status >= THREAD_WORK else 0
+    dl = (np.uint64(np.uint32(d[W_DL_HI])) << np.uint64(32)) | \
+        np.uint64(np.uint32(d[W_DL_LO]))
+    return WorkDescriptor(
+        work_id=work_id, opcode=int(d[W_OPCODE]), arg0=int(d[W_ARG0]),
+        arg1=int(d[W_ARG1]), seq_len=int(d[W_SEQLEN]),
+        request_id=int(d[W_REQID]), deadline_us=int(dl))
+
+
+def status_of(desc) -> int:
+    s = int(np.asarray(desc)[W_STATUS])
+    return s if s < THREAD_WORK else THREAD_WORK
+
+
+def is_work(desc) -> bool:
+    return int(np.asarray(desc)[W_STATUS]) >= THREAD_WORK
+
+
+class Mailbox:
+    """Host-side dual mailbox for ``n_clusters`` persistent workers."""
+
+    def __init__(self, n_clusters: int):
+        self.n = n_clusters
+        self.to_gpu = np.tile(nop_descriptor(), (n_clusters, 1))
+        self.from_gpu = np.zeros((n_clusters, DESC_WIDTH), np.int32)
+        self.from_gpu[:, W_STATUS] = THREAD_INIT
+
+    def post(self, cluster: int, desc: np.ndarray) -> None:
+        self.to_gpu[cluster] = desc
+
+    def post_all(self, desc: np.ndarray) -> None:
+        self.to_gpu[:] = desc[None, :]
+
+    def ack(self, cluster: int, status: int, request_id: int = 0) -> None:
+        self.from_gpu[cluster, W_STATUS] = status
+        self.from_gpu[cluster, W_REQID] = request_id
+        self.to_gpu[cluster] = nop_descriptor()
+
+    def cluster_status(self, cluster: int) -> int:
+        return int(self.from_gpu[cluster, W_STATUS])
+
+    def device_view(self, cluster: int):
+        """The (coalesced, full-width) transfer unit for one trigger."""
+        return jnp.asarray(self.to_gpu[cluster])

@@ -1,0 +1,185 @@
+"""Persistent runtime — the paper's persistent-kernel execution model at the
+XLA step granularity.
+
+Boot once (compile + make all heavy state device-resident), then each work
+item is dispatched by transferring ONLY a DESC_WIDTH-int32 mailbox vector;
+the device program (``lk_step``) switches on the opcode and mutates the
+donated state in place. This is the TPU analogue of LK's "spawn one kernel,
+then poke mailboxes" (DESIGN §2): Trigger = async dispatch enqueue, Wait =
+block_until_ready, exactly the paper's phase split.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mailbox as mb
+from repro.core.wcet import WcetTracker
+
+
+class PersistentRuntime:
+    """One persistent worker (paper: one SM / one cluster).
+
+    work_fns: list of ``fn(state, desc) -> (state, result)``. All fns must
+    return structurally identical (state, result) trees — they are branches
+    of one ``lax.switch``. ``result_template`` gives the result structure
+    returned for NOP steps (zeros).
+    """
+
+    def __init__(self, work_fns: Sequence[tuple[str, Callable]],
+                 result_template: Any,
+                 tracker: Optional[WcetTracker] = None,
+                 mesh=None,
+                 state_shardings=None,
+                 donate: bool = True):
+        self.work_names = [n for n, _ in work_fns]
+        self._fns = [f for _, f in work_fns]
+        self._result_template = result_template
+        self.tracker = tracker or WcetTracker("lk")
+        self.mesh = mesh
+        self._state_shardings = state_shardings
+        self._donate = donate
+        self._state = None
+        self._pending = None
+        self._compiled = None
+        self.status = mb.THREAD_INIT
+        self.steps = 0
+
+    # ------------------------------------------------------------------
+    def _lk_step(self, state, desc):
+        status = desc[mb.W_STATUS]
+        opcode = jnp.clip(desc[mb.W_OPCODE], 0, len(self._fns) - 1)
+        is_work = status >= mb.THREAD_WORK
+
+        zero_result = jax.tree.map(
+            lambda x: jnp.zeros(x.shape, x.dtype), self._result_template)
+
+        def nop_branch(state, desc):
+            return state, zero_result
+
+        def work_branch(state, desc):
+            return jax.lax.switch(opcode, self._fns, state, desc)
+
+        state, result = jax.lax.cond(is_work, work_branch, nop_branch,
+                                     state, desc)
+        from_gpu = jnp.zeros((mb.DESC_WIDTH,), jnp.int32)
+        from_gpu = from_gpu.at[mb.W_STATUS].set(
+            jnp.where(is_work, mb.THREAD_FINISHED, mb.THREAD_NOP))
+        from_gpu = from_gpu.at[mb.W_REQID].set(desc[mb.W_REQID])
+        return state, result, from_gpu
+
+    # ------------------------------------------------------------------
+    def boot(self, state) -> None:
+        """Init phase: compile the persistent step and make state resident."""
+        with self.tracker.phase("init"):
+            kwargs = {}
+            if self._donate:
+                kwargs["donate_argnums"] = (0,)
+            fn = jax.jit(self._lk_step, **kwargs)
+            desc0 = jnp.asarray(mb.nop_descriptor())
+            if self.mesh is not None and self._state_shardings is not None:
+                state = jax.device_put(state, self._state_shardings)
+            else:
+                state = jax.device_put(state)
+            self._compiled = fn.lower(state, desc0).compile()
+            self._state = state
+        self.status = mb.THREAD_NOP
+
+    # ------------------------------------------------------------------
+    def trigger(self, desc) -> None:
+        """Send one mailbox descriptor (async — returns at enqueue)."""
+        assert self._compiled is not None, "boot() first"
+        assert self._pending is None, "previous work not waited"
+        if isinstance(desc, mb.WorkDescriptor):
+            desc = desc.encode()
+        with self.tracker.phase("trigger"):
+            dvec = jnp.asarray(desc)
+            new_state, result, from_gpu = self._compiled(self._state, dvec)
+            # async dispatch: we return as soon as the work is enqueued
+            self._state = new_state
+            self._pending = (result, from_gpu)
+        self.status = mb.THREAD_WORKING
+        self.steps += 1
+
+    def wait(self):
+        """Block until the triggered step completes; returns (result, status)."""
+        assert self._pending is not None
+        with self.tracker.phase("wait"):
+            result, from_gpu = self._pending
+            result = jax.block_until_ready(result)
+            from_gpu = np.asarray(from_gpu)
+        self._pending = None
+        self.status = int(from_gpu[mb.W_STATUS])
+        return result, from_gpu
+
+    def run_sync(self, desc):
+        self.trigger(desc)
+        return self.wait()
+
+    # ------------------------------------------------------------------
+    @property
+    def state(self):
+        return self._state
+
+    def dispose(self) -> None:
+        """Release device state (paper: Dispose phase)."""
+        with self.tracker.phase("dispose"):
+            if self._pending is not None:
+                jax.block_until_ready(self._pending)
+                self._pending = None
+            if self._state is not None:
+                for leaf in jax.tree.leaves(self._state):
+                    leaf.delete()
+            self._state = None
+            self._compiled = None
+        self.status = mb.THREAD_EXIT
+
+
+class TraditionalRuntime:
+    """The paper's baseline: every work item pays full launch cost.
+
+    Mirrors a per-call CUDA kernel launch: arguments (including the heavy
+    state) are re-staged host→device on every call, and the executable is
+    re-dispatched from scratch. Used by benchmarks/bench_dispatch.py as the
+    'CUDA Alloc/Spawn/Wait/Dispose' arm.
+    """
+
+    def __init__(self, work_fns, result_template,
+                 tracker: Optional[WcetTracker] = None):
+        self._fns = dict(work_fns)
+        self._result_template = result_template
+        self.tracker = tracker or WcetTracker("traditional")
+        self._host_state = None
+        self._compiled = {}
+
+    def boot(self, state) -> None:
+        with self.tracker.phase("init"):
+            # keep state HOST-side (numpy) — re-staged per call, like kernel
+            # arguments in the traditional path
+            self._host_state = jax.tree.map(np.asarray, state)
+            for name, fn in self._fns.items():
+                dstate = jax.device_put(self._host_state)
+                desc0 = jnp.asarray(mb.nop_descriptor())
+                self._compiled[name] = jax.jit(fn).lower(
+                    dstate, desc0).compile()
+                jax.block_until_ready(dstate)
+
+    def launch(self, name: str, desc):
+        if isinstance(desc, mb.WorkDescriptor):
+            desc = desc.encode()
+        with self.tracker.phase("trigger"):
+            dstate = jax.device_put(self._host_state)      # full re-staging
+            pending = self._compiled[name](dstate, jnp.asarray(desc))
+        with self.tracker.phase("wait"):
+            new_state, result = jax.block_until_ready(pending)
+        self._host_state = jax.tree.map(np.asarray, new_state)
+        return result
+
+    def dispose(self) -> None:
+        with self.tracker.phase("dispose"):
+            self._host_state = None
+            self._compiled = {}

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, MemmapDataset, ShardedLoader,
+                                 SyntheticLM)

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the paper-relevant compute hot spots. Each
+# subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper, interpret fallback off-TPU) and ref.py (pure-jnp oracle).
+#
+#   persistent/        LK work-queue executor megakernel (paper core)
+#   flash_attention/   blockwise causal/local/softcap GQA flash
+#   decode_attention/  flash-decoding vs long KV caches
+#   ssd_scan/          mamba2 SSD chunk kernel

@@ -1,0 +1,112 @@
+"""Flash-decoding Pallas kernel (TPU target): one new token vs a long KV
+cache, streamed in blocks with running-softmax VMEM scratch.
+
+Grid (B, Hq, Tkv); the kv grid dim is sequential on TPU, so (m, l, acc)
+scratch carries across kv blocks. Invalid tail positions (>= valid_len) are
+masked; fully-invalid blocks are skipped via pl.when. This is the per-shard
+local kernel of the distributed flash-decode (models/attention.py does the
+cross-shard psum merge).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_scr, l_scr,
+                   acc_scr, *, block_kv: int, num_kv: int, scale: float,
+                   attn_softcap: float, window: int):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    valid = len_ref[0, 0]
+    k_lo = kj * block_kv
+    live = k_lo < valid
+    if window > 0:
+        live &= (k_lo + block_kv) > (valid - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (1, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if attn_softcap > 0:
+            s = jnp.tanh(s / attn_softcap) * attn_softcap  # (1, bk)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < valid
+        if window > 0:
+            mask &= kpos >= (valid - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_blk = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = corr * acc_scr[...] + pv
+        m_scr[...] = m_new
+
+    @pl.when(kj == num_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, valid_len, *,
+                            block_kv: int = 512, attn_softcap: float = 0.0,
+                            window: int = 0, interpret: bool = False):
+    """q: (B,1,Hq,D); caches: (B,S,Hkv,D); valid_len: (B,) int32.
+    Returns (B,1,Hq,D)."""
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    block_kv = min(block_kv, S)
+    assert S % block_kv == 0
+    Tkv = S // block_kv
+
+    qt = jnp.swapaxes(q, 1, 2)                     # (B,Hq,1,D)
+    kt = jnp.swapaxes(k_cache, 1, 2)               # (B,Hkv,S,D)
+    vt = jnp.swapaxes(v_cache, 1, 2)
+    vl = valid_len.reshape(B, 1).astype(jnp.int32)
+
+    kern = functools.partial(
+        _decode_kernel, block_kv=block_kv, num_kv=Tkv,
+        scale=1.0 / math.sqrt(D), attn_softcap=attn_softcap, window=window)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hq, Tkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, vl)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for decode attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid_len, *,
+                         attn_softcap: float = 0.0, window: int = 0):
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    if G > 1:
+        k_cache = jnp.repeat(k_cache, G, axis=2)
+        v_cache = jnp.repeat(v_cache, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / math.sqrt(D)
+    if attn_softcap > 0:
+        s = jnp.tanh(s / attn_softcap) * attn_softcap
+    pos = jnp.arange(S)
+    mask = pos[None, :] < valid_len[:, None]
+    if window > 0:
+        mask &= pos[None, :] >= (valid_len[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

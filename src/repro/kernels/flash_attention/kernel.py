@@ -1,0 +1,127 @@
+"""Blockwise flash attention Pallas kernel (TPU target).
+
+Grid (B, Hq, Tq, Tkv) — the last (kv) dimension is sequential on TPU, so the
+running (m, l, acc) softmax state lives in VMEM scratch across kv steps.
+Causal/local block pairs outside the band are skipped with ``pl.when``
+(predication — no MXU work issued). GQA is handled in the kv index_map
+(h // group). Block shapes are MXU-aligned (multiples of 128 on the lane
+dim); tiles stay in VMEM per BlockSpec.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, attn_softcap: float,
+                  block_q: int, block_kv: int, num_kv: int, seq_len: int,
+                  scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # band check: is this (qi, kj) block pair live?
+    q_lo = qi * block_q
+    q_hi = q_lo + block_q - 1
+    k_lo = kj * block_kv
+    live = k_lo < seq_len
+    if causal:
+        live &= k_lo <= q_hi
+    if window > 0:
+        live &= (kj * block_kv + block_kv - 1) > (q_lo - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if attn_softcap > 0:
+            s = jnp.tanh(s / attn_softcap) * attn_softcap
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_blk = jnp.max(s, axis=1, keepdims=True)     # (bq,1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = corr * acc_scr[...] + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(kj == num_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           attn_softcap: float = 0.0, block_q: int = 128,
+                           block_kv: int = 128, seq_len: int | None = None,
+                           interpret: bool = False):
+    """q: (B,S,Hq,D); k,v: (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    real_len = S if seq_len is None else seq_len
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+    Tq, Tkv = S // block_q, S // block_kv
+
+    # (B,H,S,D) layout for clean 2D tiles
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    kern = functools.partial(
+        _flash_kernel, causal=causal, window=window,
+        attn_softcap=attn_softcap, block_q=block_q, block_kv=block_kv,
+        num_kv=Tkv, seq_len=real_len, scale=1.0 / math.sqrt(D))
+
+    out = pl.pallas_call(
+        kern,
+        grid=(B, Hq, Tq, Tkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,6 @@
+from repro.kernels.persistent.kernel import (NUM_OPS, OP_ADD, OP_COPY,
+                                             OP_MATMUL, OP_NOP, OP_RELU,
+                                             OP_SCALE, TILE, pack_args,
+                                             pack_scale)
+from repro.kernels.persistent.ops import build_queue, persistent_execute
+from repro.kernels.persistent.ref import persistent_execute_ref

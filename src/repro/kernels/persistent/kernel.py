@@ -1,0 +1,136 @@
+"""Persistent work-queue executor megakernel (the paper's core, on TPU).
+
+One ``pl.pallas_call`` whose grid is the cluster count; each program is a
+persistent worker pinned to its cluster's workspace (paper: one block per
+SM). Instead of spin-waiting on host-coherent memory (impossible on TPU —
+DESIGN §2), the worker drains a device-resident descriptor queue: for each
+descriptor it switches on the opcode, executes a tile-op on its private
+workspace (8 VMEM-resident 128×128 tiles → MXU-aligned), and stamps the
+from_GPU mailbox with THREAD_FINISHED + work count. A whole DAG of micro-ops
+thus runs under ONE kernel launch — the Trigger-overhead argument of the
+paper transposed to per-op launch overhead.
+
+Opcodes: NOP / MATMUL (dst += a@b) / ADD / SCALE (fixed-point arg) / RELU /
+COPY. Tiles are f32 (T, T) with T=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.mailbox import (DESC_WIDTH, THREAD_FINISHED, THREAD_WORK,
+                                W_ARG0, W_ARG1, W_OPCODE, W_STATUS)
+
+TILE = 128
+
+OP_NOP = 0
+OP_MATMUL = 1
+OP_ADD = 2
+OP_SCALE = 3
+OP_RELU = 4
+OP_COPY = 5
+NUM_OPS = 6
+
+# descriptor arg packing for tile ops: arg0 = dst*256 + a, arg1 = b or
+# fixed-point scale (<<16)
+SCALE_SHIFT = 16
+
+
+def pack_args(dst: int, a: int, b: int = 0) -> tuple[int, int]:
+    return dst * 256 + a, b
+
+
+def pack_scale(dst: int, a: int, scale: float) -> tuple[int, int]:
+    return dst * 256 + a, int(scale * (1 << SCALE_SHIFT))
+
+
+def _executor_kernel(queue_ref, ws_ref, out_ref, fromgpu_ref):
+    """queue: (1, Q, DESC_WIDTH) i32 — this cluster's slice.
+    ws/out: (1, NBUF, T, T) f32 workspace (aliased in ops.py).
+    fromgpu: (1, DESC_WIDTH) i32."""
+    out_ref[...] = ws_ref[...]
+    q_len = queue_ref.shape[1]
+
+    def op_nop(desc):
+        pass
+
+    def _dst_a(desc):
+        packed = desc[W_ARG0]
+        return packed // 256, packed % 256
+
+    def op_matmul(desc):
+        dst, a = _dst_a(desc)
+        b = desc[W_ARG1]
+        av = out_ref[0, a]
+        bv = out_ref[0, b]
+        acc = jax.lax.dot_general(av, bv, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        out_ref[0, dst] = out_ref[0, dst] + acc
+
+    def op_add(desc):
+        dst, a = _dst_a(desc)
+        b = desc[W_ARG1]
+        out_ref[0, dst] = out_ref[0, a] + out_ref[0, b]
+
+    def op_scale(desc):
+        dst, a = _dst_a(desc)
+        scale = desc[W_ARG1].astype(jnp.float32) / (1 << SCALE_SHIFT)
+        out_ref[0, dst] = out_ref[0, a] * scale
+
+    def op_relu(desc):
+        dst, a = _dst_a(desc)
+        out_ref[0, dst] = jnp.maximum(out_ref[0, a], 0.0)
+
+    def op_copy(desc):
+        dst, a = _dst_a(desc)
+        out_ref[0, dst] = out_ref[0, a]
+
+    ops = [op_nop, op_matmul, op_add, op_scale, op_relu, op_copy]
+
+    def body(i, done_count):
+        desc = queue_ref[0, i]
+        status = desc[W_STATUS]
+        is_work = status >= THREAD_WORK
+
+        def run():
+            opcode = jnp.clip(desc[W_OPCODE], 0, NUM_OPS - 1)
+            jax.lax.switch(opcode, ops, desc)
+
+        jax.lax.cond(is_work, run, lambda: None)
+        return done_count + is_work.astype(jnp.int32)
+
+    done = jax.lax.fori_loop(0, q_len, body, jnp.int32(0))
+    fromgpu_ref[0, :] = jnp.zeros((DESC_WIDTH,), jnp.int32)
+    fromgpu_ref[0, W_STATUS] = THREAD_FINISHED
+    fromgpu_ref[0, W_ARG0] = done
+
+
+def persistent_execute_pallas(queue, workspace, *, interpret: bool = False):
+    """queue: (C, Q, DESC_WIDTH) i32; workspace: (C, NBUF, T, T) f32.
+    Returns (new workspace, from_gpu (C, DESC_WIDTH))."""
+    C, Q, W = queue.shape
+    _, NBUF, T, _ = workspace.shape
+    assert W == DESC_WIDTH and T == TILE
+
+    out, fromgpu = pl.pallas_call(
+        _executor_kernel,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, Q, W), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, NBUF, T, T), lambda c: (c, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, NBUF, T, T), lambda c: (c, 0, 0, 0)),
+            pl.BlockSpec((1, W), lambda c: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(workspace.shape, workspace.dtype),
+            jax.ShapeDtypeStruct((C, W), jnp.int32),
+        ],
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(queue, workspace)
+    return out, fromgpu

@@ -1,0 +1,45 @@
+"""Jitted wrapper + queue-building helpers for the persistent executor."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mailbox import (DESC_WIDTH, THREAD_NOP, THREAD_WORK, W_ARG0,
+                                W_ARG1, W_OPCODE, W_STATUS)
+from repro.kernels.persistent import kernel as K
+
+
+def build_queue(programs: list[list[tuple]], queue_len: int) -> np.ndarray:
+    """programs[c] = list of (opcode, arg0, arg1) for cluster c; padded with
+    NOP descriptors to queue_len."""
+    C = len(programs)
+    q = np.zeros((C, queue_len, DESC_WIDTH), np.int32)
+    q[:, :, W_STATUS] = THREAD_NOP
+    for c, prog in enumerate(programs):
+        assert len(prog) <= queue_len
+        for i, (op, a0, a1) in enumerate(prog):
+            q[c, i, W_STATUS] = THREAD_WORK + i
+            q[c, i, W_OPCODE] = op
+            q[c, i, W_ARG0] = a0
+            q[c, i, W_ARG1] = a1
+    return q
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def persistent_execute(queue, workspace, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return K.persistent_execute_pallas(queue, workspace, interpret=interpret)
+
+
+def mlp_program(nbuf_in: int = 0) -> list[tuple]:
+    """A two-layer tile-MLP as a descriptor program:
+    t3 += t0@t1; relu t3; t4 += t3@t2 — the 'finer-grained kernels' demo."""
+    return [
+        (K.OP_MATMUL, *(lambda p: (p[0], p[1]))(K.pack_args(3, 0, 1))),
+        (K.OP_RELU, K.pack_args(3, 3)[0], 0),
+        (K.OP_MATMUL, *K.pack_args(4, 3, 2)),
+    ]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the persistent work-queue executor."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mailbox import (DESC_WIDTH, THREAD_FINISHED, THREAD_WORK,
+                                W_ARG0, W_ARG1, W_OPCODE, W_STATUS)
+from repro.kernels.persistent.kernel import (NUM_OPS, OP_ADD, OP_COPY,
+                                             OP_MATMUL, OP_NOP, OP_RELU,
+                                             OP_SCALE, SCALE_SHIFT)
+
+
+def persistent_execute_ref(queue, workspace):
+    """Sequential per-cluster interpretation (numpy host semantics)."""
+    queue = np.asarray(queue)
+    ws = np.array(workspace, dtype=np.float32, copy=True)
+    C, Q, W = queue.shape
+    fromgpu = np.zeros((C, DESC_WIDTH), np.int32)
+    for c in range(C):
+        done = 0
+        for i in range(Q):
+            desc = queue[c, i]
+            if desc[W_STATUS] < THREAD_WORK:
+                continue
+            done += 1
+            op = int(np.clip(desc[W_OPCODE], 0, NUM_OPS - 1))
+            packed = int(desc[W_ARG0])
+            dst, a = packed // 256, packed % 256
+            b = int(desc[W_ARG1])
+            if op == OP_NOP:
+                done -= 0
+            elif op == OP_MATMUL:
+                ws[c, dst] = ws[c, dst] + ws[c, a] @ ws[c, b]
+            elif op == OP_ADD:
+                ws[c, dst] = ws[c, a] + ws[c, b]
+            elif op == OP_SCALE:
+                ws[c, dst] = ws[c, a] * (b / (1 << SCALE_SHIFT))
+            elif op == OP_RELU:
+                ws[c, dst] = np.maximum(ws[c, a], 0.0)
+            elif op == OP_COPY:
+                ws[c, dst] = ws[c, a]
+        fromgpu[c, W_STATUS] = THREAD_FINISHED
+        fromgpu[c, W_ARG0] = done
+    return jnp.asarray(ws), jnp.asarray(fromgpu)

@@ -1,0 +1,86 @@
+"""Mamba2 SSD chunk kernel (TPU target).
+
+Computes, per (batch, chunk, head-block) grid cell, the two chunk-local SSD
+terms: the intra-chunk quadratic output and the per-chunk end state. The
+tiny inter-chunk recurrence stays in JAX (ops.py). Head-blocking keeps the
+(L, L, Hb) decay tensor inside VMEM; L is the SSD chunk length (MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, cum_ref, b_ref, c_ref,
+                      y_ref, state_ref, *, L: int, Hb: int):
+    # refs (leading singleton grid dims stripped by BlockSpec):
+    # x: (1,1,L,Hb,P); dt/cum: (1,1,L,Hb); b/c: (1,1,L,N)
+    x = x_ref[0, 0].astype(jnp.float32)          # (L,Hb,P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (L,Hb)
+    cum = cum_ref[0, 0].astype(jnp.float32)      # (L,Hb)
+    Bc = b_ref[0, 0].astype(jnp.float32)         # (L,N)
+    Cc = c_ref[0, 0].astype(jnp.float32)         # (L,N)
+
+    G = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (L,L)
+    dec = cum[:, None, :] - cum[None, :, :]                       # (i,j,Hb)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    causal = (ii >= jj)[:, :, None]
+    Wt = jnp.where(causal, G[:, :, None] * jnp.exp(
+        jnp.where(causal, dec, 0.0)) * dt[None, :, :], 0.0)       # (i,j,Hb)
+
+    # y[i,h,p] = sum_j Wt[i,j,h] * x[j,h,p]  -> batched over h
+    Wt_h = jnp.transpose(Wt, (2, 0, 1))                           # (Hb,L,L)
+    x_h = jnp.transpose(x, (1, 0, 2))                             # (Hb,L,P)
+    y_h = jax.lax.dot_general(
+        Wt_h, x_h, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                       # (Hb,L,P)
+    y_ref[0, 0] = jnp.transpose(y_h, (1, 0, 2)).astype(y_ref.dtype)
+
+    # chunk end state: S[h,p,n] = sum_l dt[l,h]*exp(cum[L-1,h]-cum[l,h])
+    #                               * x[l,h,p] * B[l,n]
+    dec_end = jnp.exp(cum[-1:, :] - cum)                          # (L,Hb)
+    xw = x * (dt * dec_end)[:, :, None]                           # (L,Hb,P)
+    xw_h = jnp.transpose(xw, (1, 2, 0))                           # (Hb,P,L)
+    S_h = jax.lax.dot_general(
+        xw_h, Bc, (((2,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                       # (Hb,P,N)
+    state_ref[0, 0] = S_h.astype(state_ref.dtype)
+
+
+def ssd_chunk_pallas(x, dt, cum, Bm, Cm, *, head_block: int = 4,
+                     interpret: bool = False):
+    """x: (B,C,L,H,P) f32; dt/cum: (B,C,L,H); Bm/Cm: (B,C,L,N).
+    Returns (y_intra (B,C,L,H,P), states (B,C,H,P,N))."""
+    B, C, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Hb = min(head_block, H)
+    assert H % Hb == 0
+    HB = H // Hb
+
+    kern = functools.partial(_ssd_chunk_kernel, L=L, Hb=Hb)
+    y, states = pl.pallas_call(
+        kern,
+        grid=(B, C, HB),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, Hb, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, L, Hb), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, L, Hb), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, L, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, Hb, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Hb, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, L, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, C, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, cum, Bm, Cm)
+    return y, states

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for SSD: the definitional sequential state recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """x: (B,S,H,P) f32; dt: (B,S,H) post-softplus; A: (H,) negative;
+    Bm/Cm: (B,S,N). Returns (y (B,S,H,P), final state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(st, inp):
+        x_t, dt_t, B_t, C_t = inp                  # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dt_t * A)                  # (B,H)
+        st = st * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+        y = jnp.einsum("bn,bhpn->bhp", C_t, st)
+        return st, y
+
+    st0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    st, ys = jax.lax.scan(step, st0, xs)
+    return jnp.moveaxis(ys, 0, 1), st

@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count at first init.
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) cell against the production mesh, and extract the roofline inputs
+(memory_analysis, cost_analysis, post-SPMD collective bytes).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --out results/dryrun  [--resume]
+"""
+
+import argparse
+import functools
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+from repro.distributed.sharding import ShardCtx, attach_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.training.train_loop import (abstract_state, make_train_step,
+                                       opt_config_for)
+
+# ---------------------------------------------------------------------------
+# HLO collective accounting
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\w[\w.-]*)\s*=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum RESULT sizes of collective ops in post-SPMD HLO, per device."""
+    out = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = {k: 0 for k in out}
+    for m in _COLL_RE.finditer(hlo_text):
+        _, dtype, dims, kind = m.groups()
+        nbytes = _DTYPE_BYTES.get(dtype)
+        if nbytes is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out[kind] += n * nbytes
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def kind_of(shape) -> str:
+    if shape.kind == "train":
+        return "train"
+    if shape.kind == "prefill":
+        return "prefill"
+    return "long_decode" if shape.name == "long_500k" else "decode"
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_override=None):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kind = kind_of(shape)
+    expert_on_model = (cfg.moe is not None
+                       and cfg.moe.num_experts % mesh.shape["model"] == 0)
+    ctx = ShardCtx.for_mesh(mesh, kind, expert_on_model)
+    model = build(cfg, ctx)
+
+    batch_sds, batch_ax = model.input_specs(shape)
+    batch_sds = attach_shardings(
+        batch_sds, ctx.tree_shardings(batch_ax, batch_sds))
+
+    if kind == "train":
+        ocfg = opt_config_for(cfg)
+        params_sds, opt_sds = abstract_state(model, ocfg, ctx)
+        fn = make_train_step(model, ocfg,
+                             accum_steps=cfg.train_accum_steps)
+        jitted = jax.jit(fn, donate_argnums=(0, 1))
+        args = (params_sds, opt_sds, batch_sds)
+    elif kind == "prefill":
+        params_sds, _ = abstract_state(model, opt_config_for(cfg), ctx)
+        fn = functools.partial(model.prefill, max_seq=shape.seq_len)
+        jitted = jax.jit(lambda p, b: fn(p, b))
+        args = (params_sds, batch_sds)
+    else:  # decode / long_decode: serve_step — one token vs seq_len cache
+        params_sds, _ = abstract_state(model, opt_config_for(cfg), ctx)
+        B = shape.global_batch
+        S = shape.seq_len
+        if cfg.family == "vlm":
+            S = S + cfg.vision_tokens
+        caches_shape = jax.eval_shape(
+            functools.partial(model.init_caches, B, S))
+        cache_sds = attach_shardings(
+            caches_shape,
+            ctx.tree_shardings(model.cache_axes(), caches_shape))
+        jitted = jax.jit(model.decode_step, donate_argnums=(1,))
+        args = (params_sds, cache_sds, batch_sds["tokens"],
+                batch_sds["positions"])
+    return mesh, jitted, args
+
+
+# ---------------------------------------------------------------------------
+# Calibrated cost: XLA cost_analysis counts scan bodies ONCE regardless of
+# trip count (verified: scan of 10 matmuls reports 1 matmul). We therefore
+# compile each cell at 1 and 2 layer-periods — with flash pair-scans
+# UNROLLED, accum=1, and a single CE chunk, so every remaining loop body is
+# either fully visible or trip-count-1 — and extrapolate:
+#     total = F(1) + (F(2) - F(1)) * (true_periods - 1)
+# Collectives live outside the flash scan (attention is shard-local), so the
+# same two-point fit is exact for collective bytes. Memory analysis always
+# uses the REAL configuration.
+# ---------------------------------------------------------------------------
+
+def _calib_config(cfg, k: int, shape_name: str):
+    import dataclasses
+    kw = dict(train_accum_steps=1, loss_chunk=1 << 30, scan_unroll=True)
+    if shape_name == "prefill_32k":
+        kw["attn_chunk"] = 4096          # 8 blocks -> 36 unrolled pairs
+    if cfg.family == "hybrid":
+        kw["num_layers"] = k * cfg.shared_attn_every
+    elif cfg.family == "encdec":
+        kw["num_layers"] = k
+        kw["encoder_layers"] = k
+    elif cfg.family == "ssm":
+        kw["num_layers"] = k
+    else:
+        from repro.models.transformer import period_spec
+        kw["num_layers"] = k * len(period_spec(cfg))
+    return dataclasses.replace(cfg, **kw)
+
+
+def _true_units(cfg) -> tuple[float, float]:
+    """(units, extrapolation multiplier incl. fractional tail)."""
+    if cfg.family == "hybrid":
+        groups = cfg.num_layers // cfg.shared_attn_every
+        tail = cfg.num_layers - groups * cfg.shared_attn_every
+        return groups, groups - 1 + tail / cfg.shared_attn_every
+    if cfg.family == "encdec":
+        return cfg.num_layers, cfg.num_layers - 1
+    if cfg.family == "ssm":
+        return cfg.num_layers, cfg.num_layers - 1
+    from repro.models.transformer import period_spec
+    p = cfg.num_layers // len(period_spec(cfg))
+    return p, p - 1
+
+
+def _cost_of(arch, shape_name, multi_pod, cfg_k) -> dict:
+    mesh, jitted, args = build_cell(arch, shape_name, multi_pod,
+                                    cfg_override=cfg_k)
+    with mesh:
+        compiled = jitted.lower(*args).compile()
+        ca = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "collective_bytes": float(coll["total_bytes"]),
+            "collective_detail": coll["bytes"]}
+
+
+def calibrated_cost(arch, shape_name, multi_pod) -> dict:
+    from repro.models import attention as attn_mod
+    cfg = get_config(arch)
+    attn_mod.UNROLL_PAIR_SCAN = True
+    try:
+        f1 = _cost_of(arch, shape_name, multi_pod,
+                      _calib_config(cfg, 1, shape_name))
+        f2 = _cost_of(arch, shape_name, multi_pod,
+                      _calib_config(cfg, 2, shape_name))
+    finally:
+        attn_mod.UNROLL_PAIR_SCAN = False
+    _, mult = _true_units(cfg)
+    out = {}
+    for key in ("flops", "bytes_accessed", "collective_bytes"):
+        per = f2[key] - f1[key]
+        out[key] = f1[key] + per * mult
+    out["per_layer_unit"] = {k: f2[k] - f1[k]
+                             for k in ("flops", "bytes_accessed",
+                                       "collective_bytes")}
+    out["overhead"] = {k: 2 * f1[k] - f2[k]
+                       for k in ("flops", "bytes_accessed",
+                                 "collective_bytes")}
+    out["collective_detail_2p"] = f2["collective_detail"]
+    out["note"] = ("two-point layer extrapolation; accum=1 semantics; "
+                   "flash pair-scans unrolled")
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             want_cost: bool = True) -> dict:
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": 512 if multi_pod else 256}
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, SHAPES[shape_name])
+    if not ok:
+        rec.update(status="SKIP", reason=why)
+        return rec
+    try:
+        t0 = time.time()
+        mesh, jitted, args = build_cell(arch, shape_name, multi_pod)
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+            mem = compiled.memory_analysis()
+            rec["memory"] = {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                "peak_bytes_per_device": int(
+                    mem.argument_size_in_bytes + mem.output_size_in_bytes
+                    + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+            }
+            if want_cost:
+                ca = compiled.cost_analysis()
+                rec["cost_raw"] = {
+                    "flops": float(ca.get("flops", 0.0)),
+                    "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+                    "caveat": "scan bodies counted once — see cost",
+                }
+                rec["collectives_raw"] = collective_bytes(compiled.as_text())
+        if want_cost:
+            cal = calibrated_cost(arch, shape_name, multi_pod)
+            rec["cost"] = {"flops": cal["flops"],
+                           "bytes_accessed": cal["bytes_accessed"]}
+            rec["collectives"] = {"total_bytes": cal["collective_bytes"],
+                                  "detail_2p": cal["collective_detail_2p"],
+                                  "per_layer": cal["per_layer_unit"],
+                                  "note": cal["note"]}
+        rec["model_params"] = cfg.param_count()
+        rec["active_params"] = cfg.active_param_count()
+        rec["timing"] = {"lower_s": round(t_lower, 2),
+                         "compile_s": round(t_compile, 2)}
+        rec["status"] = "OK"
+    except Exception as e:  # noqa: BLE001 — record, don't die mid-sweep
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = list_configs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.resume and os.path.exists(path):
+                    with open(path) as f:
+                        if json.load(f).get("status") in ("OK", "SKIP"):
+                            print(f"[resume] {tag}")
+                            continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                # multipod cells prove the 'pod'-axis sharding compiles;
+                # the roofline/cost table is single-pod only (§Roofline)
+                rec = run_cell(arch, shape, mp, want_cost=not mp)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                msg = rec["status"]
+                if rec["status"] == "OK":
+                    gb = rec["memory"]["peak_bytes_per_device"] / 2**30
+                    msg += (f" peak={gb:.2f}GiB/dev "
+                            f"compile={rec['timing']['compile_s']}s")
+                    if "cost" in rec:
+                        msg += (f" flops/dev={rec['cost']['flops']:.3e}"
+                                f" coll/dev="
+                                f"{rec['collectives']['total_bytes']:.3e}B")
+                elif rec["status"] == "FAIL":
+                    msg += " " + rec["error"][:200]
+                else:
+                    msg += " " + rec["reason"][:80]
+                print(f"[dryrun] {tag}: {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module constant) so importing this module never touches
+jax device state — the dry-run must set XLA_FLAGS before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = ('data', 'model') — 256 chips (v5e pod).
+    Multi-pod: (2, 16, 16) = ('pod', 'data', 'model') — 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(axis_names=("data", "model")):
+    """Whatever this host actually has (tests / examples)."""
+    n = len(jax.devices())
+    if len(axis_names) == 1:
+        shape = (n,)
+    else:
+        import math
+        a = int(math.isqrt(n))
+        while n % a:
+            a -= 1
+        shape = (a, n // a)
+    return jax.make_mesh(
+        shape, axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))

@@ -1,0 +1,168 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per assignment the conv/mel frontend is a STUB: the encoder consumes
+precomputed frame embeddings (B, F, d_model) from input_specs(). Sinusoidal
+positions, non-causal encoder self-attn, decoder = causal self-attn +
+cross-attn + MLP. RMSNorm is used in place of LayerNorm for code uniformity
+(documented simplification, DESIGN §9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import axes
+from repro.models import attention as attn
+from repro.models.layers import (Builder, mlp_apply, mlp_params, rms_norm,
+                                 sinusoidal_positions)
+
+
+def _enc_layer_params(b: Builder, cfg):
+    d = cfg.d_model
+    return {
+        "ln_attn": b.p((d,), ("embed",), init="ones"),
+        "attn": attn.attn_params(b, d, cfg.num_heads, cfg.num_kv_heads,
+                                 cfg.resolved_head_dim, qkv_bias=False),
+        "ln_mlp": b.p((d,), ("embed",), init="ones"),
+        "mlp": mlp_params(b, d, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+def _dec_layer_params(b: Builder, cfg):
+    d = cfg.d_model
+    return {
+        "ln_self": b.p((d,), ("embed",), init="ones"),
+        "self_attn": attn.attn_params(b, d, cfg.num_heads, cfg.num_kv_heads,
+                                      cfg.resolved_head_dim, qkv_bias=False),
+        "ln_cross": b.p((d,), ("embed",), init="ones"),
+        "cross_attn": attn.attn_params(b, d, cfg.num_heads, cfg.num_kv_heads,
+                                       cfg.resolved_head_dim, qkv_bias=False),
+        "ln_mlp": b.p((d,), ("embed",), init="ones"),
+        "mlp": mlp_params(b, d, cfg.d_ff, cfg.gated_mlp),
+    }
+
+
+def encdec_params(b: Builder, cfg):
+    return {
+        "enc": b.stack(cfg.encoder_layers, lambda bb: _enc_layer_params(bb, cfg)),
+        "enc_norm": b.p((cfg.d_model,), ("embed",), init="ones"),
+        "dec": b.stack(cfg.num_layers, lambda bb: _dec_layer_params(bb, cfg)),
+    }
+
+
+def encode(params, frames, cfg, ctx):
+    """frames: (B,F,d_model) stub embeddings -> (B,F,d_model)."""
+    B, F, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoidal_positions(F, d)[None].astype(x.dtype)
+    x = ctx.constrain(x, "act_batch", "act_seq", "act_embed")
+    pos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def body(x, lp):
+        h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["attn"], h, ctx)
+        o = attn.attention(q, k, v, cfg, ctx, causal=False)
+        x = x + attn.out_project(lp["attn"], o, ctx)
+        h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.mlp_act, cfg.gated_mlp, ctx)
+        return x, None
+
+    from repro.models.transformer import remat_wrap
+    body = remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc"],
+                        unroll=cfg.encoder_layers if cfg.scan_unroll else 1)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_kv(lp, enc_out, ctx):
+    k = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["cross_attn"]["wk"])
+    v = jnp.einsum("bfd,dhk->bfhk", enc_out, lp["cross_attn"]["wv"])
+    return k, v
+
+
+def decoder_forward(params, x, enc_out, cfg, ctx, *, mode: str, pos,
+                    caches=None, valid_len=None):
+    """x: (B,S,d) embedded tokens. enc_out: (B,F,d) or None (decode mode uses
+    cached cross K/V). Returns (x, caches?) like transformer.forward_stack."""
+    def body(carry, xs):
+        x = carry
+        lp = xs[0]
+        # --- causal self attention ---
+        h = rms_norm(x, lp["ln_self"], cfg.norm_eps)
+        q, k, v = attn.qkv_project(lp["self_attn"], h, ctx)
+        new_self = None
+        if mode == "decode":
+            cache = xs[1]
+            kc, vc = attn.cache_update_sharded(
+                cache["k"], cache["v"], k, v, pos[:, 0], ctx)
+            o = attn.decode_attention_sharded(q, kc, vc, valid_len, ctx)
+            new_self = {"k": kc, "v": vc}
+        else:
+            o = attn.attention(q, k, v, cfg, ctx, causal=True)
+            if mode == "prefill":
+                new_self = {"k": k, "v": v}
+        x = x + attn.out_project(lp["self_attn"], o, ctx)
+        # --- cross attention ---
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        qc = jnp.einsum("bsd,dhk->bshk", h, lp["cross_attn"]["wq"])
+        if mode == "decode":
+            kx, vx = xs[2]["k"], xs[2]["v"]
+            new_cross = xs[2]
+        else:
+            kx, vx = _cross_kv(lp, enc_out, ctx)
+            new_cross = {"k": kx, "v": vx}
+        F = kx.shape[1]
+        oc = attn.attention(qc, kx, vx, cfg, ctx, causal=False)
+        x = x + attn.out_project(lp["cross_attn"], oc, ctx)
+        # --- mlp ---
+        h = rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.mlp_act, cfg.gated_mlp, ctx)
+        ys = ((new_self, new_cross) if mode in ("prefill", "decode") else None)
+        return x, ys
+
+    if mode == "train":
+        from repro.models.transformer import remat_wrap
+        body = remat_wrap(body, cfg)
+
+    if mode == "decode":
+        def dbody(carry, xs):
+            x, cc = carry
+            lp, li = xs
+            take = lambda c: jax.lax.dynamic_index_in_dim(c, li, 0,
+                                                          keepdims=False)
+            put = lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), li, 0)
+            self_i = jax.tree.map(take, cc["self"])
+            cross_i = jax.tree.map(take, cc["cross"])
+            x, (new_self, _) = body(x, (lp, self_i, cross_i))
+            cc = {"self": jax.tree.map(put, cc["self"], new_self),
+                  "cross": cc["cross"]}
+            return (x, cc), None
+        (x, cc), _ = jax.lax.scan(
+            dbody, (x, {"self": caches["self"], "cross": caches["cross"]}),
+            (params["dec"], jnp.arange(cfg.num_layers)),
+            unroll=cfg.num_layers if cfg.scan_unroll else 1)
+        return x, cc
+    x, ys = jax.lax.scan(body, x, (params["dec"],),
+                         unroll=cfg.num_layers if cfg.scan_unroll else 1)
+    if mode == "prefill":
+        return x, {"self": ys[0], "cross": ys[1]}
+    return x, None
+
+
+def encdec_init_caches(cfg, batch: int, max_seq: int):
+    hk, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    L, F = cfg.num_layers, cfg.encoder_frames
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "self": {"k": jnp.zeros((L, batch, max_seq, hk, dh), dt),
+                 "v": jnp.zeros((L, batch, max_seq, hk, dh), dt)},
+        "cross": {"k": jnp.zeros((L, batch, F, hk, dh), dt),
+                  "v": jnp.zeros((L, batch, F, hk, dh), dt)},
+    }
+
+
+def encdec_cache_axes(cfg):
+    ca = axes("layers", "cache_batch", "cache_seq", "cache_heads", None)
+    cx = axes("layers", "cache_batch", None, "cache_heads", None)
+    return {"self": {"k": ca, "v": ca}, "cross": {"k": cx, "v": cx}}

@@ -1,0 +1,192 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention+MLP block
+applied every `shared_attn_every` layers on concat(hidden, embedding).
+
+Weights of the shared block are a single copy; each invocation has its own KV
+cache (13 invocations for 81/6). Per-invocation LoRA deltas of real Zamba2 are
+omitted (DESIGN §9). Layout: `groups` of [shared-attn → `every` mamba layers],
+then `tail` plain mamba layers (81 = 13×6 + 3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Axes, axes
+from repro.models import ssm as ssm_mod
+from repro.models.layers import Builder, rms_norm
+from repro.models.transformer import layer_apply, layer_params
+
+
+def _counts(cfg):
+    every = cfg.shared_attn_every
+    groups = cfg.num_layers // every
+    tail = cfg.num_layers - groups * every
+    return groups, every, tail
+
+
+def hybrid_params(b: Builder, cfg):
+    groups, every, tail = _counts(cfg)
+    d = cfg.d_model
+    p = {
+        "shared": {
+            "w_cat": b.p((2 * d, d), ("embed", None)),
+            "blk": layer_params(b, cfg, "attn_mlp"),
+        },
+        "groups": b.stack(
+            groups,
+            lambda bb: [layer_params(bb, cfg, "ssm") for _ in range(every)]),
+    }
+    if tail:
+        p["tail"] = b.stack(
+            tail, lambda bb: layer_params(bb, cfg, "ssm"))
+    return p
+
+
+def _shared_apply(p, x, x0, cfg, ctx, *, mode, pos, cache, valid_len):
+    h = jnp.einsum("bsd,dm->bsm",
+                   jnp.concatenate([x, x0], axis=-1), p["w_cat"])
+    h2, aux, new_cache = layer_apply(
+        p["blk"], h, cfg, ctx, "attn_mlp", {}, mode=mode, pos=pos,
+        cache=cache, valid_len=valid_len)
+    return x + (h2 - h), aux, new_cache
+
+
+def hybrid_forward(params, x, cfg, ctx, *, mode: str, pos,
+                   caches=None, valid_len=None):
+    """x: (B,S,d) embedded input. Returns per mode like forward_stack."""
+    groups, every, tail = _counts(cfg)
+    x0 = x
+
+    def group_body(carry, xs):
+        x, _ = carry
+        gp = xs[0]                     # list of `every` ssm layer params
+        attn_cache = xs[1] if mode == "decode" else None
+        ssm_caches = xs[2] if mode == "decode" else [None] * every
+        x, aux, new_attn_cache = _shared_apply(
+            params["shared"], x, x0, cfg, ctx, mode=mode, pos=pos,
+            cache=attn_cache, valid_len=valid_len)
+        new_ssm = []
+        for i in range(every):
+            x, _, ns = layer_apply(gp[i], x, cfg, ctx, "ssm", {}, mode=mode,
+                                   pos=pos, cache=ssm_caches[i],
+                                   valid_len=valid_len)
+            new_ssm.append(ns)
+        ys = (new_attn_cache, new_ssm) if mode in ("prefill", "decode") else None
+        return (x, carry[1]), ys
+
+    if mode == "train":
+        from repro.models.transformer import remat_wrap
+        group_body = remat_wrap(group_body, cfg)
+
+    new_caches = {}
+    if mode == "decode":
+        def dgroup_body(carry, xs):
+            x, cc = carry
+            gp, gi = xs
+            take = lambda c: jax.lax.dynamic_index_in_dim(c, gi, 0,
+                                                          keepdims=False)
+            put = lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), gi, 0)
+            attn_cache = jax.tree.map(take, cc["shared_attn"])
+            x, _, new_attn = _shared_apply(
+                params["shared"], x, x0, cfg, ctx, mode=mode, pos=pos,
+                cache=attn_cache, valid_len=valid_len)
+            cc = dict(cc)
+            cc["shared_attn"] = jax.tree.map(put, cc["shared_attn"],
+                                             new_attn)
+            new_groups = list(cc["ssm_groups"])
+            for i in range(every):
+                st = jax.tree.map(take, cc["ssm_groups"][i])
+                x, _, ns = layer_apply(gp[i], x, cfg, ctx, "ssm", {},
+                                       mode=mode, pos=pos, cache=st,
+                                       valid_len=valid_len)
+                new_groups[i] = jax.tree.map(put, cc["ssm_groups"][i], ns)
+            cc["ssm_groups"] = new_groups
+            return (x, cc), None
+
+        cc0 = {"shared_attn": caches["shared_attn"],
+               "ssm_groups": caches["ssm_groups"]}
+        (x, cc), _ = jax.lax.scan(
+            dgroup_body, (x, cc0), (params["groups"], jnp.arange(groups)),
+            unroll=groups if cfg.scan_unroll else 1)
+        new_caches["shared_attn"] = cc["shared_attn"]
+        new_caches["ssm_groups"] = cc["ssm_groups"]
+    else:
+        xs = (params["groups"],)
+        (x, _), ys = jax.lax.scan(group_body, (x, 0.0), xs,
+                                  unroll=groups if cfg.scan_unroll else 1)
+        if mode == "prefill":
+            new_caches["shared_attn"] = ys[0]
+            new_caches["ssm_groups"] = ys[1]
+
+    if tail:
+        if mode == "decode":
+            def dtail_body(carry, xs):
+                x, cc = carry
+                lp, ti = xs
+                st = jax.tree.map(lambda c: jax.lax.dynamic_index_in_dim(
+                    c, ti, 0, keepdims=False), cc)
+                x, _, ns = layer_apply(lp, x, cfg, ctx, "ssm", {},
+                                       mode=mode, pos=pos, cache=st,
+                                       valid_len=valid_len)
+                cc = jax.tree.map(
+                    lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                        c, n.astype(c.dtype), ti, 0), cc, ns)
+                return (x, cc), None
+            (x, tcc), _ = jax.lax.scan(
+                dtail_body, (x, caches["ssm_tail"]),
+                (params["tail"], jnp.arange(tail)),
+                unroll=tail if cfg.scan_unroll else 1)
+            new_caches["ssm_tail"] = tcc
+        else:
+            def tail_body(carry, xs):
+                x = carry
+                x, _, ns = layer_apply(xs[0], x, cfg, ctx, "ssm", {},
+                                       mode=mode, pos=pos, cache=None,
+                                       valid_len=valid_len)
+                return x, (ns if mode == "prefill" else None)
+            x, tys = jax.lax.scan(tail_body, x, (params["tail"],),
+                                  unroll=tail if cfg.scan_unroll else 1)
+            if mode == "prefill":
+                new_caches["ssm_tail"] = tys
+
+    if mode == "train":
+        return x, {}
+    return x, {}, new_caches
+
+
+def hybrid_init_caches(cfg, batch: int, max_seq: int):
+    groups, every, tail = _counts(cfg)
+    hk, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    st = ssm_mod.ssm_init_state(cfg, batch)
+    caches = {
+        "shared_attn": {
+            "k": jnp.zeros((groups, batch, max_seq, hk, dh), dt),
+            "v": jnp.zeros((groups, batch, max_seq, hk, dh), dt),
+        },
+        "ssm_groups": [
+            jax.tree.map(lambda a: jnp.broadcast_to(
+                a, (groups,) + a.shape).copy(), st)
+            for _ in range(every)
+        ],
+    }
+    if tail:
+        caches["ssm_tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (tail,) + a.shape).copy(), st)
+    return caches
+
+
+def hybrid_cache_axes(cfg):
+    groups, every, tail = _counts(cfg)
+    st_ax = ssm_mod.ssm_state_axes(cfg)
+    stacked = jax.tree.map(lambda a: axes("layers", *a.names), st_ax,
+                           is_leaf=lambda x: isinstance(x, Axes))
+    ca = axes("layers", "cache_batch", "cache_seq", "cache_heads", None)
+    out = {
+        "shared_attn": {"k": ca, "v": ca},
+        "ssm_groups": [stacked for _ in range(every)],
+    }
+    if tail:
+        out["ssm_tail"] = stacked
+    return out

@@ -1,0 +1,192 @@
+"""Shared building blocks: param builder, norms, embeddings, RoPE, MLP."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import Axes, axes
+
+
+# ---------------------------------------------------------------------------
+# Param builder: one code path yields both the param tree ("init" mode) and
+# the logical-axes tree ("axes" mode) — guaranteed structural consistency.
+# ---------------------------------------------------------------------------
+
+class Builder:
+    def __init__(self, mode: str, rng=None, dtype=jnp.bfloat16):
+        assert mode in ("init", "axes")
+        self.mode = mode
+        self.rng = rng
+        self.dtype = dtype
+        self._counter = 0
+
+    def _next_key(self):
+        self._counter += 1
+        return jax.random.fold_in(self.rng, self._counter)
+
+    def p(self, shape, logical_axes, init: str = "normal",
+          scale: Optional[float] = None, dtype=None):
+        assert len(shape) == len(logical_axes), (shape, logical_axes)
+        if self.mode == "axes":
+            return axes(*logical_axes)
+        dtype = dtype or self.dtype
+        if init == "zeros":
+            return jnp.zeros(shape, dtype)
+        if init == "ones":
+            return jnp.ones(shape, dtype)
+        key = self._next_key()
+        if init == "normal":
+            if scale is None:
+                fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+                scale = 1.0 / math.sqrt(max(fan_in, 1))
+            return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+        if init == "uniform":
+            s = scale if scale is not None else 1.0
+            return (jax.random.uniform(key, shape, jnp.float32, -s, s)).astype(dtype)
+        raise ValueError(init)
+
+    def stack(self, n: int, fn):
+        """Build n stacked copies of a sub-tree (leading 'layers' axis)."""
+        if self.mode == "axes":
+            sub = fn(self)
+            return jax.tree.map(
+                lambda a: axes("layers", *a.names), sub,
+                is_leaf=lambda x: isinstance(x, Axes))
+        subs = [fn(self) for _ in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *subs)
+
+
+# ---------------------------------------------------------------------------
+# Norms (f32 accumulation)
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    # gemma-style (1 + w) parametrization is folded at init (w starts at 1).
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d//2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # (..., S, d//2)
+    cos = jnp.cos(angles)[..., None, :]               # (..., S, 1, d//2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_at(positions, d_model: int):
+    """Sinusoidal embedding at arbitrary integer positions. (B,) -> (B,d)."""
+    pos = positions.astype(jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d_model, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d_model))
+    half = pos * div
+    out = jnp.zeros((positions.shape[0], d_model), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(half))
+    out = out.at[:, 1::2].set(jnp.cos(half))
+    return out
+
+
+def sinusoidal_positions(num_pos: int, d_model: int):
+    pos = jnp.arange(num_pos, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d_model, 2, dtype=jnp.float32)
+                  * (-math.log(10000.0) / d_model))
+    pe = jnp.zeros((num_pos, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(b: Builder, d_model: int, d_ff: int, gated: bool):
+    p = {
+        "w_in": b.p((d_model, d_ff), ("embed", "mlp")),
+        "w_out": b.p((d_ff, d_model), ("mlp", "embed")),
+    }
+    if gated:
+        p["w_gate"] = b.p((d_model, d_ff), ("embed", "mlp"))
+    return p
+
+
+def mlp_apply(p, x, act: str, gated: bool, ctx):
+    h = jnp.einsum("...d,df->...f", x, p["w_in"])
+    if gated:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+        g = _act(g, act)
+        h = g * h
+    else:
+        h = _act(h, act)
+    # seq gathered inside the MLP (Megatron-SP); d_ff is the sharded dim
+    h = ctx.constrain(h, "act_batch", None, "act_mlp")
+    return jnp.einsum("...f,fd->...d", h, p["w_out"])
+
+
+def _act(x, name: str):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0:
+        return (jnp.tanh(x / cap) * cap)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_params(b: Builder, vocab: int, d_model: int, tied: bool):
+    p = {"table": b.p((vocab, d_model), ("vocab", "embed"), scale=0.02)}
+    if not tied:
+        p["head"] = b.p((d_model, vocab), ("embed", "vocab"))
+    return p
+
+
+def embed_lookup(p, tokens, d_model: int):
+    out = jnp.take(p["table"], tokens, axis=0)
+    return out.astype(p["table"].dtype)
+
+
+def unembed(p, x, tied: bool, cap: float, ctx):
+    if tied:
+        logits = jnp.einsum("...d,vd->...v", x, p["table"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["head"])
+    logits = softcap(logits.astype(jnp.float32), cap)
+    return ctx.constrain(logits, "act_batch", None, "act_vocab")

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts layer: top-k router + group-capacity einsum dispatch
+(GShard/Switch style — static shapes, SPMD-friendly).
+
+Two grouping modes:
+* ``local``  (train/prefill): one group per sequence; the dispatch one-hot
+  stays sharded (groups on data, experts on model).
+* ``global`` (decode): all live tokens form ONE group. Token counts are tiny
+  (≤ global batch), so gathering them (a few KB) lets capacity be
+  ceil(T·k/E·cf) instead of per-shard worst case — without it, dispatch-all
+  waste at C=tokens would dominate decode FLOPs (see DESIGN §4).
+
+Expert weight sharding is chosen per-arch by divisibility: experts on 'model'
+when E % mesh_model == 0 (llama4 128e), else expert-TP on d_ff (grok 8e).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Builder, _act, mlp_params, mlp_apply
+
+
+def moe_params(b: Builder, cfg):
+    m = cfg.moe
+    d, f, E = cfg.d_model, cfg.d_ff, m.num_experts
+    # expert d_model dim gets its OWN logical axis: expert stacks are the
+    # memory giants (grok 633GB, llama4 772GB bf16), so their d_model dim
+    # stays data-sharded even at inference (DESIGN §4)
+    p = {
+        "router": b.p((d, E), ("embed", "expert"), scale=0.02),
+        "w_in": b.p((E, d, f), ("expert", "expert_embed", "expert_mlp")),
+        "w_gate": b.p((E, d, f), ("expert", "expert_embed", "expert_mlp")),
+        "w_out": b.p((E, f, d), ("expert", "expert_mlp", "expert_embed")),
+    }
+    if m.shared_expert:
+        p["shared"] = mlp_params(b, d, f, gated=True)
+    return p
+
+
+def _capacity(tokens_per_group: int, num_experts: int, top_k: int,
+              cf: float) -> int:
+    c = int(math.ceil(tokens_per_group * top_k * cf / num_experts))
+    return max(c, 1)
+
+
+def moe_apply(p, x, cfg, ctx, group_mode: str = "local"):
+    """x: (B,S,D) -> (y (B,S,D), aux_losses dict of scalars)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+
+    if group_mode == "global":
+        xg = x.reshape(1, B * S, D)
+        xg = ctx.replicate(xg)
+    else:
+        # fixed-size dispatch groups: keeps the one-hot dispatch/combine
+        # einsums linear in S (capacity ∝ group length)
+        g = min(m.group_size, S)
+        if S % g == 0 and S > g:
+            xg = x.reshape(B * (S // g), g, D)
+        else:
+            xg = x
+        # seq gathered for expert dispatch (EP needs all local tokens)
+        xg = ctx.constrain(xg, "act_batch", None, "act_embed")
+    G, Sg, _ = xg.shape
+    C = _capacity(Sg, E, K, m.capacity_factor)
+    if group_mode == "global":
+        # decode: token counts are tiny — floor the capacity so collisions
+        # (dropped tokens => wrong generations) are vanishingly rare
+        C = max(C, 4)
+
+    # ---- routing (f32) ----
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)            # (G,Sg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (G,Sg,K,E)
+    flat = onehot.reshape(G, Sg * K, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1.0          # (G,Sg*K,E)
+    keep = (pos >= 0) & (pos < C)
+    pos = jnp.clip(pos, 0, C - 1).astype(jnp.int32)
+    # slot one-hot: (G, Sg*K, E, C)
+    slot = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep[..., None] \
+        * flat[..., None]
+    slot = slot.reshape(G, Sg, K, E, C)
+    dispatch = jnp.sum(slot, axis=2)                     # (G,Sg,E,C)
+    combine = jnp.sum(slot * gate_vals[..., None, None], axis=2)
+    dispatch = ctx.constrain(dispatch, "act_batch", None, "act_expert",
+                             None) if group_mode == "local" else dispatch
+
+    # ---- expert compute ----
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch.astype(xg.dtype), xg)
+    if group_mode == "local":
+        xin = ctx.constrain(xin, "act_batch", "act_expert", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xin, p["w_in"])
+    gsig = jnp.einsum("gecd,edf->gecf", xin, p["w_gate"])
+    h = _act(gsig, cfg.mlp_act) * h
+    out_e = jnp.einsum("gecf,efd->gecd", h, p["w_out"])
+    y = jnp.einsum("gecd,gsec->gsd", out_e, combine.astype(out_e.dtype))
+    y = y.reshape(B, S, D)
+    y = ctx.constrain(y, "act_batch", "act_seq", "act_embed")
+
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, cfg.mlp_act, gated=True, ctx=ctx)
+
+    # ---- aux losses (Switch LB + router z) ----
+    me = jnp.mean(probs, axis=(0, 1))                    # (E,)
+    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))  # (E,) routed frac * K
+    lb = E * jnp.sum(me * frac) / K
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"moe_lb": lb * m.router_aux_weight,
+           "moe_z": z * m.router_z_weight}
+    return y, aux

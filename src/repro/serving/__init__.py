@@ -1,0 +1,2 @@
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_cache import SlotManager, insert_slot_caches

@@ -1,0 +1,176 @@
+"""Persistent serving engine — the paper's execution model applied to LM
+inference.
+
+Boot once: weights + KV caches + slot metadata become device-resident state
+of a ``PersistentRuntime``. Each decode step is then triggered by a mailbox
+descriptor only (DESC_WIDTH int32s) — no weight or cache re-staging — and
+runs ONE lockstep decode for all active slots (continuous batching with
+static shapes). Prefill+insert run as separate resident-state jits (mixed
+continuous batching), mirroring LK's Init vs Trigger split.
+
+Phases feed the WcetTracker: Init = boot/compile, Trigger = descriptor
+dispatch, Wait = block_until_ready — directly comparable to paper Tables
+II/III via benchmarks/bench_dispatch.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mailbox as mb
+from repro.core.persistent import PersistentRuntime
+from repro.core.wcet import WcetTracker
+from repro.serving.kv_cache import SlotManager, insert_slot_caches
+
+OP_DECODE = 0
+
+
+class ServingEngine:
+    def __init__(self, model, params, *, max_batch: int, max_seq: int,
+                 prefill_bucket: int = 64, eos_id: int = -1,
+                 tracker: Optional[WcetTracker] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.prefill_bucket = prefill_bucket
+        self.eos_id = eos_id
+        self.slots = SlotManager(max_batch)
+        self.tracker = tracker or WcetTracker("engine")
+
+        caches = model.init_caches(max_batch, max_seq)
+        # own a private copy: engine state is donated through every step /
+        # insert, which would otherwise invalidate the caller's param buffers
+        params = jax.tree.map(jnp.array, params)
+        state = {
+            "params": params,
+            "caches": caches,
+            "tokens": jnp.zeros((max_batch, 1), jnp.int32),
+            "lengths": jnp.zeros((max_batch,), jnp.int32),
+            "active": jnp.zeros((max_batch,), jnp.bool_),
+        }
+
+        def decode_fn(state, desc):
+            logits, new_caches = model.decode_step(
+                state["params"], state["caches"], state["tokens"],
+                state["lengths"])
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(jnp.int32)
+            act = state["active"]
+            tokens = jnp.where(act[:, None], nxt[:, None], state["tokens"])
+            lengths = state["lengths"] + act.astype(jnp.int32)
+            new_state = dict(state, caches=new_caches, tokens=tokens,
+                             lengths=lengths)
+            return new_state, nxt
+
+        self.rt = PersistentRuntime(
+            [("decode", decode_fn)],
+            result_template=jnp.zeros((max_batch,), jnp.int32),
+            tracker=self.tracker)
+        self.rt.boot(state)
+
+        self._insert_jit = jax.jit(self._insert_impl, donate_argnums=(0,))
+        self._prefill_jits: dict[int, Any] = {}
+        self._step_counter = 0
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _insert_impl(state, slot_caches, slot, first_token, length):
+        caches = insert_slot_caches(state["caches"], slot_caches, slot)
+        tokens = jax.lax.dynamic_update_slice(
+            state["tokens"], first_token.reshape(1, 1).astype(jnp.int32),
+            (slot, 0))
+        lengths = jax.lax.dynamic_update_slice(
+            state["lengths"], length.reshape(1).astype(jnp.int32), (slot,))
+        active = jax.lax.dynamic_update_slice(
+            state["active"], jnp.ones((1,), jnp.bool_), (slot,))
+        return dict(state, caches=caches, tokens=tokens, lengths=lengths,
+                    active=active)
+
+    def _prefill(self, batch: dict, length: int):
+        # exact-length prefill: one compile per distinct prompt length.
+        # (Bucketed prefill with masked pads is a documented production
+        # optimization — pads corrupt SSM recurrences unless dt is masked,
+        # see DESIGN §9 — so correctness-first here.)
+        if length not in self._prefill_jits:
+            self._prefill_jits[length] = jax.jit(
+                functools.partial(self.model.prefill, max_seq=self.max_seq))
+        return self._prefill_jits[length](self.rt.state["params"], batch)
+
+    # ------------------------------------------------------------------
+    def add_request(self, request_id: int, prompt: np.ndarray,
+                    max_new_tokens: int = 32,
+                    extras: Optional[dict] = None) -> Optional[int]:
+        """Prefill a prompt into a free slot. Returns the slot or None."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        L = int(prompt.shape[0])
+        # the prefill emits the first generated token, so the decode loop
+        # contributes max_new_tokens - 1 more
+        slot = self.slots.allocate(
+            request_id, L, min(L + max_new_tokens - 1, self.max_seq - 1))
+        if slot is None:
+            return None
+        batch = {"tokens": jnp.asarray(prompt[None])}
+        if extras:
+            batch.update({k: jnp.asarray(v)[None] for k, v in extras.items()})
+        logits, caches = self._prefill(batch, L)
+        first = jnp.argmax(logits[0, -1, :]).astype(jnp.int32)
+        self.slots.slots[slot].generated.append(int(first))
+        state = self._insert_jit(self.rt.state, caches, slot, first,
+                                 jnp.asarray(L, jnp.int32))
+        self.rt._state = state
+        return slot
+
+    # ------------------------------------------------------------------
+    def step(self) -> dict[int, int]:
+        """One persistent decode step; returns {slot: new_token} for active
+        slots, frees finished slots."""
+        desc = mb.WorkDescriptor(work_id=self._step_counter % 1024,
+                                 opcode=OP_DECODE,
+                                 request_id=self._step_counter)
+        self._step_counter += 1
+        self.rt.trigger(desc)
+        result, _ = self.rt.wait()
+        toks = np.asarray(result)
+        out = {}
+        for i in self.slots.active_indices():
+            s = self.slots.slots[i]
+            t = int(toks[i])
+            s.generated.append(t)
+            s.length += 1
+            out[i] = t
+            if t == self.eos_id or s.length >= s.max_len:
+                self.slots.free(i)
+        return out
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: list[np.ndarray], max_new_tokens: int = 16,
+                 extras: Optional[list] = None) -> list[list[int]]:
+        """Simple driver: admit all (queueing when full), decode until done
+        (continuous batching: freed slots are refilled between steps)."""
+        queue = list(enumerate(prompts))
+        record: dict[int, Any] = {}
+
+        def admit():
+            while queue:
+                rid, p = queue[0]
+                ex = extras[rid] if extras else None
+                slot = self.add_request(rid, p, max_new_tokens, ex)
+                if slot is None:
+                    return
+                # keep a live reference to the Slot object: it survives
+                # slot reuse (SlotManager replaces, not mutates, on free)
+                record[rid] = self.slots.slots[slot]
+                queue.pop(0)
+
+        admit()
+        while self.slots.any_active or queue:
+            self.step()
+            admit()
+        return [record[r].generated for r in range(len(prompts))]
+
+    def dispose(self):
+        self.rt.dispose()

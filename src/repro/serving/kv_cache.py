@@ -1,0 +1,61 @@
+"""KV-cache slot management for continuous batching.
+
+Static-capacity design (real-time constraint — no retracing on the hot
+path, DESIGN §9): the engine owns ``max_batch`` slots; requests are admitted
+into free slots, generate in lockstep decode steps, and free their slot on
+completion. Cache leaves universally carry batch at axis 1 ((layers, B, ...)),
+so slot insertion is a single dynamic_update_slice_in_dim per leaf.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+BATCH_AXIS = 1   # cache leaves are (layers/groups, B, ...)
+
+
+@dataclass
+class Slot:
+    request_id: int = -1
+    length: int = 0
+    max_len: int = 0
+    generated: list = field(default_factory=list)
+    active: bool = False
+
+
+class SlotManager:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.slots = [Slot() for _ in range(capacity)]
+
+    def allocate(self, request_id: int, prompt_len: int,
+                 max_len: int) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                self.slots[i] = Slot(request_id=request_id, length=prompt_len,
+                                     max_len=max_len, active=True)
+                return i
+        return None
+
+    def free(self, slot: int) -> Slot:
+        s = self.slots[slot]
+        self.slots[slot] = Slot()
+        return s
+
+    def active_indices(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.active]
+
+    @property
+    def any_active(self) -> bool:
+        return any(s.active for s in self.slots)
+
+
+def insert_slot_caches(big, small, slot: int):
+    """Write a batch-1 cache tree into slot `slot` of the engine cache."""
+    def upd(b, s):
+        return jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), slot, axis=BATCH_AXIS)
+    return jax.tree.map(upd, big, small)

@@ -1,0 +1,3 @@
+from repro.training.train_loop import (abstract_state, init_state,
+                                       make_train_step, opt_config_for,
+                                       state_axes, state_shardings)

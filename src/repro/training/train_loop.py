@@ -1,0 +1,100 @@
+"""Training step factory: value_and_grad + microbatch gradient accumulation
++ AdamW (fp32/8-bit) + optional int8 gradient compression across pods.
+
+``make_train_step`` returns a pure (params, opt_state, batch) → (params,
+opt_state, metrics) function suitable for jit/pjit with donated state.
+``make_state_specs`` yields the ShapeDtypeStruct + NamedSharding trees the
+dry-run lowers against (no allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardCtx, attach_shardings
+from repro.optim.optimizer import (AdamWConfig, adamw_init, adamw_state_axes,
+                                   adamw_update, make_optimizer)
+
+
+def make_train_step(model, opt_cfg: AdamWConfig, accum_steps: int = 1):
+    """model: repro.models.Model. Batch leaves are (global_batch, ...)."""
+
+    loss_fn = model.loss
+
+    accum_dtype = jnp.dtype(model.cfg.accum_dtype)
+
+    def compute_grads(params, batch):
+        if accum_steps <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return grads, metrics
+
+        def micro(carry, mb):
+            g_acc, m_acc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(a.dtype), g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        mbs = jax.tree.map(
+            lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                + x.shape[1:]), batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
+        m0 = jax.eval_shape(lambda b: loss_fn(params, b)[1],
+                            jax.tree.map(lambda x: x[0], mbs))
+        m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+        (grads, metrics), _ = jax.lax.scan(micro, (g0, m0), mbs)
+        inv = 1.0 / accum_steps
+        return (jax.tree.map(lambda g: g * inv, grads),
+                jax.tree.map(lambda m: m * inv, metrics))
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        params, opt_state, info = adamw_update(opt_cfg, params, grads,
+                                               opt_state)
+        metrics = dict(metrics)
+        metrics.update(info)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# State construction / dry-run specs
+# ---------------------------------------------------------------------------
+
+def opt_config_for(cfg, lr=3e-4, **kw) -> AdamWConfig:
+    return make_optimizer(cfg.optimizer, lr=lr, **kw)
+
+
+def init_state(model, opt_cfg: AdamWConfig, rng):
+    params = model.init(rng)
+    opt_state = adamw_init(opt_cfg, params)
+    return params, opt_state
+
+
+def state_axes(model, opt_cfg: AdamWConfig):
+    p_axes = model.param_axes()
+    return p_axes, adamw_state_axes(opt_cfg, p_axes)
+
+
+def state_shardings(model, opt_cfg: AdamWConfig, ctx: ShardCtx,
+                    params_shape=None, opt_shape=None):
+    p_axes, o_axes = state_axes(model, opt_cfg)
+    return (ctx.tree_shardings(p_axes, params_shape),
+            ctx.tree_shardings(o_axes, opt_shape))
+
+
+def abstract_state(model, opt_cfg: AdamWConfig, ctx: ShardCtx):
+    """ShapeDtypeStructs (with shardings) for params+opt state — dry-run."""
+    params_shape = jax.eval_shape(model.init, jax.random.key(0))
+    opt_shape = jax.eval_shape(
+        functools.partial(adamw_init, opt_cfg), params_shape)
+    p_sh, o_sh = state_shardings(model, opt_cfg, ctx, params_shape, opt_shape)
+    return (attach_shardings(params_shape, p_sh),
+            attach_shardings(opt_shape, o_sh))

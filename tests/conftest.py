@@ -1,0 +1,33 @@
+import os
+
+# Tests must see the REAL device count (1 CPU) — only dryrun forces 512.
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.key(0)
+
+
+def tiny_batch(cfg, B=2, S=32, seed=1):
+    """Batch dict for any family's reduced config."""
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_frames, cfg.d_model)), jnp.float32)
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_tokens, cfg.d_model)), jnp.float32)
+    return batch

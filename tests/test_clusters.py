@@ -1,0 +1,73 @@
+"""Cluster carving: disjointness, coverage, elastic recarve, pinning."""
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clusters import ClusterManager, _best_2d, make_cluster_mesh
+
+
+class FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+    def __repr__(self):
+        return f"dev{self.id}"
+
+
+def devs(n):
+    return [FakeDev(i) for i in range(n)]
+
+
+@given(n=st.integers(1, 4096))
+@settings(max_examples=100, deadline=None)
+def test_best_2d_property(n):
+    a, b = _best_2d(n)
+    assert a * b == n and a <= b
+
+
+def test_carve_disjoint_and_coverage():
+    cm = ClusterManager(devices=devs(16), n_clusters=4)
+    assert len(cm.clusters) == 4
+    assert cm.check_disjoint()
+    assert cm.coverage() == 1.0
+    assert all(c.n_devices == 4 for c in cm.clusters)
+
+
+def test_carve_with_spares():
+    cm = ClusterManager(devices=devs(10), n_clusters=3)
+    assert sum(c.n_devices for c in cm.clusters) == 9
+    assert len(cm.spare_devices) == 1
+
+
+def test_recarve_after_failure():
+    cm = ClusterManager(devices=devs(16), n_clusters=4)
+    gen0 = cm.generation
+    cm.mark_failed(1)
+    clusters = cm.recarve()
+    assert cm.generation == gen0 + 1
+    assert len(clusters) == 3                 # elastic shrink
+    assert cm.check_disjoint()
+    assert sum(c.n_devices for c in clusters) == 12
+
+
+def test_recarve_all_failed_raises():
+    cm = ClusterManager(devices=devs(4), n_clusters=2)
+    cm.mark_failed(0)
+    cm.mark_failed(1)
+    with pytest.raises(RuntimeError):
+        cm.recarve()
+
+
+def test_pin_map_round_robin():
+    cm = ClusterManager(devices=devs(8), n_clusters=2)
+    pins = cm.pin_map(["interactive", "batch", "background"])
+    assert pins["interactive"] == 0
+    assert pins["batch"] == 1
+    assert pins["background"] == 0
+
+
+def test_real_device_mesh():
+    mesh = make_cluster_mesh(jax.devices(), axis_names=("data",))
+    assert mesh.shape["data"] == len(jax.devices())
+    cm = ClusterManager(n_clusters=1, axis_names=("data",))
+    assert cm.clusters[0].mesh.axis_names == ("data",)

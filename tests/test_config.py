@@ -1,0 +1,101 @@
+"""Config registry: exact assigned specs, param counts, reduced invariants,
+shape applicability."""
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs, shape_applicable
+
+EXPECTED = {
+    # name: (family, layers, d_model, heads, kv, d_ff, vocab, ~params B)
+    "mamba2-780m": ("ssm", 48, 1536, None, None, 0, 50_280, 0.78),
+    "gemma2-2b": ("dense", 26, 2304, 8, 4, 9216, 256_000, 2.6),
+    "qwen2-72b": ("dense", 80, 8192, 64, 8, 29568, 152_064, 72.7),
+    "llama3-8b": ("dense", 32, 4096, 32, 8, 14336, 128_256, 8.0),
+    "mistral-nemo-12b": ("dense", 40, 5120, 32, 8, 14336, 131_072, 12.2),
+    "zamba2-7b": ("hybrid", 81, 3584, 32, 32, 14336, 32_000, 6.8),
+    "internvl2-76b": ("vlm", 80, 8192, 64, 8, 28672, 128_256, 70.5),
+    "whisper-tiny": ("encdec", 4, 384, 6, 6, 1536, 51_865, 0.056),
+    "llama4-maverick-400b-a17b": ("moe", 48, 5120, 40, 8, 8192, 202_048,
+                                  397.7),
+    "grok-1-314b": ("moe", 64, 6144, 48, 8, 32768, 131_072, 316.5),
+}
+
+
+def test_all_ten_registered():
+    assert set(list_configs()) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_assigned_spec_exact(name):
+    fam, L, d, H, kv, ff, V, nb = EXPECTED[name]
+    cfg = get_config(name)
+    assert cfg.family == fam
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+    if H is not None:
+        assert cfg.num_heads == H and cfg.num_kv_heads == kv
+    assert cfg.param_count() / 1e9 == pytest.approx(nb, rel=0.05)
+
+
+def test_moe_specs():
+    l4 = get_config("llama4-maverick-400b-a17b").moe
+    assert l4.num_experts == 128 and l4.top_k == 1
+    gk = get_config("grok-1-314b").moe
+    assert gk.num_experts == 8 and gk.top_k == 2
+    # active param counts match the names
+    assert get_config("llama4-maverick-400b-a17b").active_param_count() \
+        / 1e9 == pytest.approx(14.2, rel=0.1)
+    assert get_config("grok-1-314b").active_param_count() / 1e9 \
+        == pytest.approx(84.6, rel=0.1)
+
+
+def test_ssm_specs():
+    m = get_config("mamba2-780m")
+    assert m.ssm.state_dim == 128
+    z = get_config("zamba2-7b")
+    assert z.ssm.state_dim == 64 and z.shared_attn_every == 6
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_reduced_invariants(name):
+    cfg = get_config(name)
+    r = cfg.reduced()
+    r.validate()
+    assert r.family == cfg.family
+    assert r.num_heads % r.num_kv_heads == 0
+    assert r.d_model <= 256 and r.vocab_size <= 1024
+    assert r.param_count() < 5e6
+
+
+def test_padded_vocab():
+    for name in EXPECTED:
+        cfg = get_config(name)
+        assert cfg.padded_vocab % 256 == 0
+        assert 0 <= cfg.padded_vocab - cfg.vocab_size < 256
+
+
+def test_shape_applicability():
+    # long_500k only for sub-quadratic families
+    ok, _ = shape_applicable(get_config("mamba2-780m"), SHAPES["long_500k"])
+    assert ok
+    ok, _ = shape_applicable(get_config("zamba2-7b"), SHAPES["long_500k"])
+    assert ok
+    for name in ("llama3-8b", "gemma2-2b", "whisper-tiny",
+                 "grok-1-314b"):
+        ok, why = shape_applicable(get_config(name), SHAPES["long_500k"])
+        assert not ok and "sub-quadratic" in why
+    # every other shape applies to everyone
+    for name in EXPECTED:
+        for sh in ("train_4k", "prefill_32k", "decode_32k"):
+            ok, _ = shape_applicable(get_config(name), SHAPES[sh])
+            assert ok
+
+
+def test_shape_set():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524_288
+    assert SHAPES["long_500k"].global_batch == 1

@@ -1,0 +1,88 @@
+"""EDF dispatcher: ordering, admission control, straggler flagging,
+failure re-queue."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core.dispatcher import AdmissionError, Dispatcher, now_us
+from repro.core.persistent import PersistentRuntime
+
+
+def work(state, desc):
+    state = dict(state)
+    state["x"] = state["x"] + 1.0
+    return state, desc[mb.W_REQID][None]
+
+
+def make_rt():
+    rt = PersistentRuntime([("w", work)],
+                           result_template=jnp.zeros((1,), jnp.int32))
+    rt.boot({"x": jnp.zeros((4,), jnp.float32)})
+    return rt
+
+
+def test_edf_ordering():
+    disp = Dispatcher({0: make_rt()})
+    base = now_us()
+    # submit out of deadline order
+    for rid, dl in [(1, base + 10**9), (2, base + 5 * 10**8),
+                    (3, base + 2 * 10**9)]:
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=rid,
+                                      deadline_us=dl), admission=False)
+    done = disp.drain()
+    assert [c.request_id for c in done] == [2, 1, 3]
+
+
+def test_admission_rejects_impossible_deadline():
+    disp = Dispatcher({0: make_rt()}, wcet_us={0: 10_000.0})
+    with pytest.raises(AdmissionError):
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                      deadline_us=now_us() + 10))
+    assert disp.rejected == 1
+    # generous deadline admitted
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=2,
+                                  deadline_us=now_us() + 10**8))
+    assert len(disp.drain()) == 1
+
+
+def test_least_loaded_placement():
+    disp = Dispatcher({0: make_rt(), 1: make_rt()})
+    c1 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1))
+    c2 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=2))
+    assert {c1, c2} == {0, 1}
+
+
+def test_pinning():
+    disp = Dispatcher({0: make_rt(), 1: make_rt()})
+    disp.pin("interactive", 1)
+    c = disp.submit(mb.WorkDescriptor(opcode=0, request_id=9),
+                    request_class="interactive")
+    assert c == 1
+
+
+def test_failure_requeues_to_survivor():
+    rt_bad = make_rt()
+    rt_bad.dispose()                      # triggering will now fail
+    disp = Dispatcher({0: rt_bad, 1: make_rt()})
+    failures = []
+    disp.on_failure = failures.append
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), cluster=0,
+                admission=False)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=2), cluster=0,
+                admission=False)
+    with pytest.raises(Exception):
+        disp.pump(0)
+    assert failures == [0]
+    assert 0 not in disp.runtimes
+    done = disp.drain()                   # re-queued work runs on cluster 1
+    assert sorted(c.request_id for c in done) == [1, 2]
+    assert all(c.cluster == 1 for c in done)
+
+
+def test_deadline_stats():
+    disp = Dispatcher({0: make_rt()})
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), admission=False)
+    disp.drain()
+    s = disp.deadline_stats()
+    assert s["n"] == 1 and s["met"] == 1
+    assert s["worst_service_us"] >= s["avg_service_us"]

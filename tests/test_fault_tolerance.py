@@ -1,0 +1,63 @@
+"""Fault tolerance: straggler detection, heartbeats, elastic recovery plans
+that chain ClusterManager + CheckpointManager."""
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.clusters import ClusterManager
+from repro.distributed.fault_tolerance import (ElasticPlanner,
+                                               HeartbeatMonitor,
+                                               StragglerDetector)
+from tests_util_devs import FakeDev, devs  # noqa: F401  (helper below)
+
+
+def test_straggler_flags_outlier():
+    det = StragglerDetector(min_samples=4)
+    flags = [det.observe(0, 1.0) for _ in range(10)]
+    assert not any(flags)
+    assert det.observe(0, 10.0)
+
+
+def test_straggler_adapts_to_new_normal():
+    det = StragglerDetector(min_samples=4, alpha=0.5)
+    for _ in range(10):
+        det.observe(0, 1.0)
+    for _ in range(20):
+        det.observe(0, 3.0)
+    assert not det.observe(0, 3.2)        # 3x is the new normal
+
+
+def test_heartbeat_detects_dead():
+    t = [0.0]
+    hb = HeartbeatMonitor(timeout_factor=3.0, min_timeout_s=1.0,
+                          clock=lambda: t[0])
+    for i in range(5):
+        t[0] += 1.0
+        hb.beat(0)
+        hb.beat(1)
+    t[0] += 10.0
+    hb.beat(1)
+    assert hb.dead_clusters() == [0]
+
+
+def test_elastic_planner_end_to_end(tmp_path):
+    cm = ClusterManager(devices=devs(16), n_clusters=4)
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(42, {"w": jnp.ones((4,))})
+    planner = ElasticPlanner(cm, ckpt)
+    plan = planner.plan([1, 3])
+    assert plan.failed_clusters == [1, 3]
+    assert plan.surviving_devices == 8
+    assert plan.new_n_clusters == 2
+    assert plan.restore_step == 42
+    clusters = planner.execute(plan, request_classes=("rt", "batch"))
+    assert len(clusters) == 2
+    assert cm.check_disjoint()
+    assert set(plan.repin.values()) <= {0, 1}
+
+
+def test_planner_no_survivors(tmp_path):
+    cm = ClusterManager(devices=devs(4), n_clusters=2)
+    planner = ElasticPlanner(cm)
+    with pytest.raises(RuntimeError):
+        planner.plan([0, 1])

@@ -1,0 +1,69 @@
+"""Pallas flash attention kernel: shape/dtype sweeps vs pure-jnp oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import attention_ref, flash_attention
+
+
+def make_qkv(B, S, Hq, Hkv, D, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S", [128, 256])
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (8, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_causal_sweep(S, Hq, Hkv, dtype):
+    q, k, v = make_qkv(2, S, Hq, Hkv, 64, dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_kv=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_local_window(window):
+    q, k, v = make_qkv(1, 256, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_kv=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_softcap():
+    q, k, v = make_qkv(1, 128, 4, 4, 128, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, attn_softcap=30.0,
+                          block_q=64, block_kv=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, attn_softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_non_causal():
+    q, k, v = make_qkv(2, 128, 6, 6, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_kv=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_seq_len_masking():
+    q, k, v = make_qkv(1, 128, 4, 4, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, seq_len=77,
+                          block_q=64, block_kv=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=False, seq_len=77)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("block", [32, 128])
+def test_block_size_invariance(block):
+    q, k, v = make_qkv(1, 256, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=block,
+                          block_kv=block, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)

@@ -1,0 +1,96 @@
+"""Persistent work-queue executor kernel vs pure-numpy oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import mailbox as mb
+from repro.kernels.persistent import (OP_ADD, OP_COPY, OP_MATMUL, OP_NOP,
+                                      OP_RELU, OP_SCALE, TILE, build_queue,
+                                      pack_args, pack_scale,
+                                      persistent_execute,
+                                      persistent_execute_ref)
+
+
+def run_both(progs, nbuf=6, qlen=8, seed=0):
+    rng = np.random.default_rng(seed)
+    C = len(progs)
+    ws = rng.normal(size=(C, nbuf, TILE, TILE)).astype(np.float32)
+    q = build_queue(progs, qlen)
+    out, fg = persistent_execute(jnp.asarray(q), jnp.asarray(ws),
+                                 interpret=True)
+    out_ref, fg_ref = persistent_execute_ref(q, ws)
+    return out, fg, out_ref, fg_ref
+
+
+def test_mixed_program_matches_oracle():
+    progs = [
+        [(OP_MATMUL, *pack_args(3, 0, 1)), (OP_RELU, pack_args(3, 3)[0], 0),
+         (OP_MATMUL, *pack_args(4, 3, 2)), (OP_SCALE, *pack_scale(4, 4, 0.5))],
+        [(OP_ADD, *pack_args(5, 0, 1)), (OP_COPY, *pack_args(2, 5)),
+         (OP_NOP, 0, 0)],
+    ]
+    out, fg, out_ref, fg_ref = run_both(progs)
+    np.testing.assert_allclose(out, out_ref, rtol=1e-5, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(fg), np.asarray(fg_ref))
+
+
+def test_work_count_in_from_gpu():
+    progs = [[(OP_ADD, *pack_args(2, 0, 1))] * 3, []]
+    _, fg, _, _ = run_both(progs)
+    assert fg[0, mb.W_STATUS] == mb.THREAD_FINISHED
+    assert fg[0, mb.W_ARG0] == 3
+    assert fg[1, mb.W_ARG0] == 0                  # all-NOP queue
+
+
+def test_chained_matmul_mlp():
+    """The paper's 'finer-grained kernels' case: a tile-MLP as descriptors."""
+    progs = [[(OP_MATMUL, *pack_args(3, 0, 1)),
+              (OP_RELU, pack_args(3, 3)[0], 0),
+              (OP_MATMUL, *pack_args(4, 3, 2))]]
+    rng = np.random.default_rng(1)
+    ws = np.zeros((1, 5, TILE, TILE), np.float32)
+    ws[0, 0] = rng.normal(size=(TILE, TILE))
+    ws[0, 1] = rng.normal(size=(TILE, TILE))
+    ws[0, 2] = rng.normal(size=(TILE, TILE))
+    q = build_queue(progs, 4)
+    out, _ = persistent_execute(jnp.asarray(q), jnp.asarray(ws),
+                                interpret=True)
+    want = np.maximum(ws[0, 0] @ ws[0, 1], 0) @ ws[0, 2]
+    np.testing.assert_allclose(np.asarray(out[0, 4]), want, rtol=1e-4,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("n_clusters", [1, 2, 4])
+def test_cluster_isolation(n_clusters):
+    """Programs on one cluster never touch another cluster's workspace."""
+    progs = [[(OP_SCALE, *pack_scale(0, 0, 2.0))]] + \
+            [[] for _ in range(n_clusters - 1)]
+    out, _, out_ref, _ = run_both(progs, nbuf=2, qlen=2)
+    np.testing.assert_allclose(out, out_ref, rtol=1e-6)
+    # untouched clusters identical to their input workspace
+    rng = np.random.default_rng(0)
+    ws = rng.normal(size=(n_clusters, 2, TILE, TILE)).astype(np.float32)
+    for c in range(1, n_clusters):
+        np.testing.assert_array_equal(np.asarray(out[c]), ws[c])
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_random_programs_property(seed):
+    rng = np.random.default_rng(seed)
+    progs = []
+    for c in range(2):
+        prog = []
+        for _ in range(rng.integers(1, 6)):
+            op = int(rng.choice([OP_MATMUL, OP_ADD, OP_SCALE, OP_RELU,
+                                 OP_COPY]))
+            dst, a, b = rng.integers(0, 4, 3)
+            if op == OP_SCALE:
+                a0, a1 = pack_scale(int(dst), int(a),
+                                    float(rng.uniform(-2, 2)))
+            else:
+                a0, a1 = pack_args(int(dst), int(a), int(b))
+            prog.append((op, a0, a1))
+        progs.append(prog)
+    out, fg, out_ref, fg_ref = run_both(progs, nbuf=4, qlen=6, seed=seed)
+    np.testing.assert_allclose(out, out_ref, rtol=1e-4, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(fg), np.asarray(fg_ref))

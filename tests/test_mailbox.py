@@ -1,0 +1,62 @@
+"""Mailbox protocol (paper Table I): statuses, descriptor codec, host API."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mailbox as mb
+
+
+def test_table_i_status_values():
+    # exact values from the paper
+    assert mb.THREAD_INIT == 0
+    assert mb.THREAD_FINISHED == 1
+    assert mb.THREAD_WORKING == 2
+    assert mb.THREAD_NOP == 4
+    assert mb.THREAD_EXIT == 8
+    assert mb.THREAD_WORK == 16
+
+
+@given(
+    work_id=st.integers(0, 2**10),
+    opcode=st.integers(0, 2**15),
+    arg0=st.integers(-2**31, 2**31 - 1),
+    arg1=st.integers(-2**31, 2**31 - 1),
+    seq_len=st.integers(0, 2**20),
+    request_id=st.integers(0, 2**31 - 1),
+    deadline_us=st.integers(0, 2**63 - 1),
+)
+@settings(max_examples=200, deadline=None)
+def test_descriptor_roundtrip(work_id, opcode, arg0, arg1, seq_len,
+                              request_id, deadline_us):
+    d = mb.WorkDescriptor(work_id=work_id, opcode=opcode, arg0=arg0,
+                          arg1=arg1, seq_len=seq_len, request_id=request_id,
+                          deadline_us=deadline_us)
+    enc = d.encode()
+    assert enc.dtype == np.int32 and enc.shape == (mb.DESC_WIDTH,)
+    assert mb.decode(enc) == d
+    assert mb.is_work(enc)
+    assert mb.status_of(enc) == mb.THREAD_WORK
+
+
+def test_nop_exit_descriptors():
+    assert mb.status_of(mb.nop_descriptor()) == mb.THREAD_NOP
+    assert not mb.is_work(mb.nop_descriptor())
+    assert mb.status_of(mb.exit_descriptor()) == mb.THREAD_EXIT
+
+
+def test_mailbox_host_api():
+    box = mb.Mailbox(4)
+    assert all(box.cluster_status(c) == mb.THREAD_INIT for c in range(4))
+    d = mb.WorkDescriptor(work_id=2, opcode=1, request_id=77)
+    box.post(1, d.encode())
+    assert mb.is_work(box.to_gpu[1])
+    assert not mb.is_work(box.to_gpu[0])
+    box.ack(1, mb.THREAD_FINISHED, request_id=77)
+    assert box.cluster_status(1) == mb.THREAD_FINISHED
+    assert box.from_gpu[1, mb.W_REQID] == 77
+    assert not mb.is_work(box.to_gpu[1])          # reset to NOP
+    box.post_all(mb.exit_descriptor())
+    assert all(mb.status_of(box.to_gpu[c]) == mb.THREAD_EXIT
+               for c in range(4))
+    # device_view is the coalesced full-width transfer unit (paper §II-D)
+    assert box.device_view(0).shape == (mb.DESC_WIDTH,)

@@ -1,0 +1,80 @@
+"""Per-architecture smoke tests: REDUCED same-family config, one forward /
+train step on CPU, output shapes + no NaNs; prefill↔decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_batch
+from repro.configs import get_config, list_configs
+from repro.distributed import ShardCtx
+from repro.models import build
+from repro.training import init_state, make_train_step, opt_config_for
+
+ALL_ARCHS = list_configs()
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build(cfg, ShardCtx.single())
+    batch = tiny_batch(cfg, B=2, S=32)
+    ocfg = opt_config_for(cfg, lr=1e-3)
+    params, opt = init_state(model, ocfg, jax.random.key(0))
+
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch} loss not finite"
+    assert 0 <= float(metrics["acc"]) <= 1
+
+    step = jax.jit(make_train_step(model, ocfg), donate_argnums=(0, 1))
+    params, opt, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode_step(token S-1 | prefill of S-1) == prefill(S) logits."""
+    cfg = get_config(arch).reduced()
+    model = build(cfg, ShardCtx.single(kind="decode"))
+    params = model.init(jax.random.key(0))
+    B, S, MAX = 2, 12, 32
+    batch = tiny_batch(cfg, B=B, S=S)
+
+    logits_full, _ = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+        params, batch)
+    bm1 = dict(batch)
+    bm1["tokens"] = batch["tokens"][:, :-1]
+    _, caches = jax.jit(lambda p, b: model.prefill(p, b, MAX))(params, bm1)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    if cfg.family == "vlm":
+        pos = pos + cfg.vision_tokens
+    logits_dec, _ = jax.jit(model.decode_step)(
+        params, caches, batch["tokens"][:, -1:], pos)
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-6
+    err = float(jnp.max(jnp.abs(logits_full - logits_dec)))
+    assert err < 2e-2 * max(scale, 1.0), f"{arch}: {err} vs scale {scale}"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_multi_step_decode_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    model = build(cfg, ShardCtx.single(kind="decode"))
+    params = model.init(jax.random.key(0))
+    B, S, MAX = 1, 6, 24
+    batch = tiny_batch(cfg, B=B, S=S)
+    logits, caches = jax.jit(lambda p, b: model.prefill(p, b, MAX))(
+        params, batch)
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    if cfg.family == "vlm":
+        pos = pos + cfg.vision_tokens
+    dec = jax.jit(model.decode_step)
+    for _ in range(4):
+        logits, caches = dec(params, caches, tok, pos)
+        assert bool(jnp.all(jnp.isfinite(logits))), arch
+        tok = jnp.argmax(logits[:, :, :], axis=-1).astype(jnp.int32)
+        pos = pos + 1

@@ -1,0 +1,118 @@
+"""Optimizer: AdamW math vs manual reference, 8-bit quantization bounds,
+schedules, clipping, gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, compress_grads,
+                                   cosine_schedule, decompress_grads,
+                                   dequantize_8bit, global_norm, qblock_for,
+                                   quantize_8bit)
+
+
+def test_adamw_first_step_math():
+    cfg = AdamWConfig(lr=1e-2, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                      max_grad_norm=1e9)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": 2 * jnp.ones((4,))}
+    st_ = adamw_init(cfg, p)
+    p2, st2, info = adamw_update(cfg, p, g, st_)
+    # bias-corrected first step: mh=g, vh=g^2 -> upd = g/(|g|+eps) = 1
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1.0 - 1e-2, rtol=1e-6)
+    assert int(st2["step"]) == 1
+    assert float(info["grad_norm"]) == pytest.approx(4.0)
+
+
+def test_weight_decay_applied():
+    cfg = AdamWConfig(lr=1e-1, weight_decay=0.5, max_grad_norm=1e9)
+    p = {"w": jnp.ones((2,))}
+    g = {"w": jnp.zeros((2,))}
+    st_ = adamw_init(cfg, p)
+    p2, _, _ = adamw_update(cfg, p, g, st_)
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1.0 - 0.1 * 0.5,
+                               rtol=1e-5)
+
+
+def test_8bit_matches_fp32_closely():
+    rng = np.random.default_rng(0)
+    p = {"w": jnp.asarray(rng.normal(size=(512, 8)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(512, 8)), jnp.float32)}
+    c32 = AdamWConfig(lr=1e-2, max_grad_norm=1e9)
+    c8 = AdamWConfig(lr=1e-2, max_grad_norm=1e9, eightbit=True)
+    s32, s8 = adamw_init(c32, p), adamw_init(c8, p)
+    p32, s32, _ = adamw_update(c32, p, g, s32)
+    p8, s8, _ = adamw_update(c8, p, g, s8)
+    np.testing.assert_allclose(np.asarray(p8["w"]), np.asarray(p32["w"]),
+                               atol=5e-4)
+    # second step exercises dequantize path
+    p32b, _, _ = adamw_update(c32, p32, g, s32)
+    p8b, _, _ = adamw_update(c8, p8, g, s8)
+    # step-2 drift comes from int8 m/v state error (≈1 lr-unit worst case,
+    # consistent with published 8-bit optimizer behaviour)
+    np.testing.assert_allclose(np.asarray(p8b["w"]), np.asarray(p32b["w"]),
+                               atol=2e-2)
+
+
+def test_8bit_big_leaf_scanned_update():
+    """Leaves above the chunk threshold go through the lax.scan path."""
+    rng = np.random.default_rng(1)
+    big = jnp.asarray(rng.normal(size=(4, 1 << 16, 520)), jnp.float32)
+    # 4*65536*520 > 2^27 and leading dim > 1 -> scanned
+    p = {"w": big}
+    g = {"w": jnp.asarray(rng.normal(size=big.shape), jnp.float32) * 1e-2}
+    cfg = AdamWConfig(lr=1e-3, max_grad_norm=1e9, eightbit=True)
+    s = adamw_init(cfg, p)
+    p2, s2, _ = adamw_update(cfg, p, g, s)
+    assert p2["w"].shape == big.shape
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=8,
+                max_size=512))
+@settings(max_examples=50, deadline=None)
+def test_quantize_roundtrip_bound(vals):
+    x = jnp.asarray(np.asarray(vals, np.float32).reshape(1, -1))
+    q, s = quantize_8bit(x)
+    xr = dequantize_8bit(q, s, x.shape)
+    B = qblock_for(x.shape[-1])
+    blocks = np.asarray(x).reshape(-1, x.shape[-1])
+    # error bounded by half a quantization step per block
+    err = np.abs(np.asarray(xr) - np.asarray(x))
+    bound = np.abs(np.asarray(x)).max() / 127.0 + 1e-6
+    assert err.max() <= bound + 1e-5
+
+
+def test_qblock_alignment():
+    assert qblock_for(8192) == 256
+    assert 29568 % qblock_for(29568) == 0
+    assert (29568 // qblock_for(29568)) % 16 == 0
+    assert qblock_for(48) in (16, 48)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": 3 * jnp.ones((4,)), "b": 4 * jnp.ones((4,))}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(10.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr(100)) == pytest.approx(1e-4, rel=1e-3)
+    assert float(lr(55)) < float(lr(11))
+
+
+def test_gradient_compression_roundtrip():
+    rng = np.random.default_rng(2)
+    g = {"w": jnp.asarray(rng.normal(size=(256, 16)), jnp.float32)}
+    comp = compress_grads(g)
+    assert comp["w"]["q"].dtype == jnp.int8
+    back = decompress_grads(comp, g)
+    rel = float(jnp.max(jnp.abs(back["w"] - g["w"]))
+                / jnp.max(jnp.abs(g["w"])))
+    assert rel < 0.01

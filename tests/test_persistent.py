@@ -1,0 +1,95 @@
+"""Persistent runtime semantics: boot/trigger/wait/dispose, opcode switch,
+state residency, NOP behaviour, WCET phases."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core.persistent import PersistentRuntime, TraditionalRuntime
+
+
+def add_fn(state, desc):
+    state = dict(state)
+    state["x"] = state["x"] + desc[mb.W_ARG0].astype(jnp.float32)
+    return state, state["x"].sum()[None]
+
+
+def mul_fn(state, desc):
+    state = dict(state)
+    state["x"] = state["x"] * 2.0
+    return state, state["x"].sum()[None]
+
+
+@pytest.fixture
+def rt():
+    r = PersistentRuntime([("add", add_fn), ("mul", mul_fn)],
+                          result_template=jnp.zeros((1,), jnp.float32))
+    r.boot({"x": jnp.zeros((8,), jnp.float32)})
+    yield r
+    if r.state is not None:
+        r.dispose()
+
+
+def test_work_and_status(rt):
+    res, fg = rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=5, request_id=3))
+    assert float(res[0]) == 40.0
+    assert fg[mb.W_STATUS] == mb.THREAD_FINISHED
+    assert fg[mb.W_REQID] == 3
+    res, fg = rt.run_sync(mb.WorkDescriptor(opcode=1, request_id=4))
+    assert float(res[0]) == 80.0
+
+
+def test_nop_leaves_state_and_reports_nop(rt):
+    rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=1))
+    res, fg = rt.run_sync(mb.nop_descriptor())
+    assert fg[mb.W_STATUS] == mb.THREAD_NOP
+    assert float(res[0]) == 0.0                   # zeroed result template
+    res, _ = rt.run_sync(mb.WorkDescriptor(opcode=1))
+    assert float(res[0]) == 16.0                  # state survived the NOP
+
+
+def test_state_is_device_resident(rt):
+    """Trigger must not re-stage state: the state buffers persist between
+    steps (same donated lineage) and only the descriptor is transferred."""
+    rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=2))
+    x1 = rt.state["x"]
+    rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=2))
+    assert float(rt.state["x"][0]) == 4.0
+    # old donated buffer is gone — proof the step consumed it in place
+    with pytest.raises(RuntimeError):
+        _ = np.asarray(x1)
+
+
+def test_trigger_without_wait_then_wait(rt):
+    rt.trigger(mb.WorkDescriptor(opcode=0, arg0=1))
+    assert rt.status == mb.THREAD_WORKING
+    res, fg = rt.wait()
+    assert rt.status == mb.THREAD_FINISHED
+    with pytest.raises(AssertionError):
+        rt.wait()                                 # nothing pending
+
+
+def test_dispose_releases(rt):
+    rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=1))
+    rt.dispose()
+    assert rt.state is None
+    assert rt.status == mb.THREAD_EXIT
+
+
+def test_wcet_phases_recorded(rt):
+    rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=1))
+    stats = rt.tracker.report()
+    for phase in ("init", "trigger", "wait"):
+        assert stats[phase]["count"] >= 1
+        assert stats[phase]["avg_ns"] > 0
+
+
+def test_traditional_runtime_equivalent_results():
+    tr = TraditionalRuntime([("add", add_fn)],
+                            result_template=jnp.zeros((1,), jnp.float32))
+    tr.boot({"x": jnp.zeros((8,), jnp.float32)})
+    r1 = tr.launch("add", mb.WorkDescriptor(opcode=0, arg0=5))
+    r2 = tr.launch("add", mb.WorkDescriptor(opcode=0, arg0=5))
+    assert float(r1[0]) == 40.0 and float(r2[0]) == 80.0
+    tr.dispose()

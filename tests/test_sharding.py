@@ -1,0 +1,93 @@
+"""Sharding rules: logical→physical resolution, divisibility fallback."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.sharding import (Axes, ShardCtx, _fit_axes, axes,
+                                        logical_to_spec, make_rules)
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+POD = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_fit_axes_exact():
+    assert _fit_axes(64, "model", MESH) == "model"
+    assert _fit_axes(8, "model", MESH) is None          # 8 % 16 != 0
+    assert _fit_axes(256, ("data", "model"), MESH) == ("data", "model")
+
+
+def test_fit_axes_greedy_prefix():
+    # 32 fits pod*data(2*16) exactly
+    assert _fit_axes(32, ("pod", "data"), POD) == ("pod", "data")
+    # 8 fits pod(2) but not pod*data(32)
+    assert _fit_axes(8, ("pod", "data"), POD) == "pod"
+    # 1 fits nothing (long-decode batch)
+    assert _fit_axes(1, ("pod", "data"), POD) is None
+
+
+@given(dim=st.integers(1, 10_000))
+@settings(max_examples=200, deadline=None)
+def test_fit_axes_always_divides(dim):
+    got = _fit_axes(dim, ("pod", "data", "model"), POD)
+    if got is None:
+        assert dim % 2 != 0
+    else:
+        names = (got,) if isinstance(got, str) else got
+        prod = 1
+        for n in names:
+            prod *= POD.shape[n]
+        assert dim % prod == 0
+
+
+def test_train_rules_sequence_parallel():
+    rules = make_rules(MESH, "train")
+    assert rules["act_seq"] == "model"
+    assert rules["embed"] == "data"
+    assert rules["heads"] == "model"
+
+
+def test_inference_rules():
+    rules = make_rules(MESH, "decode")
+    assert rules["act_seq"] is None
+    assert rules["embed"] is None                  # no fsdp at inference
+    assert rules["cache_seq"] == "model"
+    assert rules["expert_embed"] == "data"         # expert stacks stay fsdp
+    long = make_rules(MESH, "long_decode")
+    assert long["cache_seq"] == ("data", "model")
+    assert long["cache_batch"] is None
+
+
+def test_multipod_rules():
+    rules = make_rules(POD, "train")
+    assert rules["act_batch"] == ("pod", "data")
+    long = make_rules(POD, "long_decode")
+    assert long["cache_seq"] == ("pod", "data", "model")
+
+
+def test_logical_to_spec_with_shapes():
+    rules = make_rules(MESH, "train")
+    spec = logical_to_spec(axes("act_batch", None, "act_heads"), rules,
+                           MESH, (256, 128, 8))
+    # 8 heads don't divide 16 -> dropped; trailing Nones trimmed
+    assert tuple(spec) == ("data",)
+
+
+def test_expert_placement_rule():
+    em = make_rules(MESH, "train", expert_on_model=True)
+    assert em["expert"] == "model" and em["expert_mlp"] is None
+    tp = make_rules(MESH, "train", expert_on_model=False)
+    assert tp["expert"] is None and tp["expert_mlp"] == "model"
+
+
+def test_single_ctx_noop():
+    ctx = ShardCtx.single()
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert ctx.constrain(x, "act_batch", "act_seq") is x
+    assert ctx.model_axis_size == 1

@@ -1,0 +1,111 @@
+"""End-to-end system behaviour: the paper's full flow — boot a persistent
+engine on pinned clusters, dispatch via mailboxes under EDF, survive a
+cluster failure with checkpoint restart."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import mailbox as mb
+from repro.core.clusters import ClusterManager
+from repro.core.persistent import PersistentRuntime
+from repro.data import SyntheticLM
+from repro.distributed import ShardCtx
+from repro.distributed.fault_tolerance import ElasticPlanner
+from repro.models import build
+from repro.serving import ServingEngine
+from repro.training import init_state, make_train_step, opt_config_for
+
+
+def test_lk_dispatch_is_lighter_than_traditional():
+    """The paper's central claim, transposed: persistent (descriptor-only)
+    Trigger must be much cheaper than the traditional full-re-staging
+    launch. (Table II analogue; quantified in benchmarks/bench_dispatch.)"""
+    from repro.core.persistent import TraditionalRuntime
+
+    import numpy as _np
+
+    def work(state, desc):
+        state = dict(state)
+        state["w"] = state["w"] * 1.0001
+        return state, state["w"].sum()[None]
+
+    # big-enough state that re-staging dominates scheduler jitter (32 MB)
+    heavy = {"w": jnp.ones((2048, 4096), jnp.float32)}
+    lk = PersistentRuntime([("w", work)],
+                           result_template=jnp.zeros((1,), jnp.float32))
+    lk.boot(jax.tree.map(jnp.copy, heavy))
+    tr = TraditionalRuntime([("w", work)],
+                            result_template=jnp.zeros((1,), jnp.float32))
+    tr.boot(heavy)
+    import time as _time
+    lk_ts, tr_ts = [], []
+    for _ in range(30):
+        t0 = _time.perf_counter_ns()
+        lk.trigger(mb.WorkDescriptor(opcode=0))
+        lk_ts.append(_time.perf_counter_ns() - t0)
+        lk.wait()
+        t0 = _time.perf_counter_ns()
+        tr.launch("w", mb.WorkDescriptor(opcode=0))
+        tr_ts.append(_time.perf_counter_ns() - t0)
+    # medians are robust to contention spikes on a shared CPU; the
+    # traditional arm re-stages 32 MB per launch AND pays execution in
+    # `launch`, so the persistent trigger must be well under it
+    assert _np.median(lk_ts) < _np.median(tr_ts), (
+        _np.median(lk_ts), _np.median(tr_ts))
+    lk.dispose()
+    tr.dispose()
+
+
+def test_train_checkpoint_failover_resume(tmp_path):
+    """Simulated node failure mid-training: recarve clusters, restore the
+    checkpoint, finish training — loss keeps decreasing."""
+    cfg = get_config("llama3-8b").reduced()
+    model = build(cfg, ShardCtx.single())
+    ocfg = opt_config_for(cfg, lr=3e-3)
+    params, opt = init_state(model, ocfg, jax.random.key(0))
+    step = jax.jit(make_train_step(model, ocfg))
+    ds = SyntheticLM(cfg.vocab_size, seed=1, noise=0.0)
+    ckpt = CheckpointManager(str(tmp_path))
+
+    losses = []
+    for s in range(6):
+        batch = {"tokens": jnp.asarray(ds.batch(s % 2, 4, 48))}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    ckpt.save(6, {"p": params, "o": opt})
+
+    # --- failure: two of four clusters die ---
+    from tests_util_devs import devs
+    cm = ClusterManager(devices=devs(8), n_clusters=4)
+    planner = ElasticPlanner(cm, ckpt)
+    plan = planner.plan([0, 2])
+    planner.execute(plan)
+    assert plan.restore_step == 6
+    tpl = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                       {"p": params, "o": opt})
+    back = ckpt.restore(plan.restore_step, tpl)
+    params, opt = back["p"], back["o"]
+
+    for s in range(6, 12):
+        batch = {"tokens": jnp.asarray(ds.batch(s % 2, 4, 48))}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.7 * losses[0], losses
+
+
+def test_serving_engine_phase_profile():
+    """Persistent serving: boot dominates, steps are cheap (paper's point)."""
+    cfg = get_config("llama3-8b").reduced()
+    model = build(cfg, ShardCtx.single(kind="decode"))
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, max_batch=2, max_seq=48)
+    prompts = [np.array([1, 2, 3]), np.array([4, 5, 6, 7]),
+               np.array([8, 9])]
+    outs = eng.generate(prompts, max_new_tokens=5)
+    assert all(len(o) == 5 for o in outs)
+    s = eng.tracker.stats
+    assert s["trigger"].avg_ns < s["init"].avg_ns   # boot dominates, not steps
+    eng.dispose()

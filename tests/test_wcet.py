@@ -1,0 +1,43 @@
+"""WCET tracker: stats math, jitter (paper's avg-vs-worst gap)."""
+import math
+import time
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wcet import PhaseStats, WcetTracker
+
+
+@given(st.lists(st.floats(1.0, 1e9), min_size=1, max_size=100))
+@settings(max_examples=100, deadline=None)
+def test_phase_stats_properties(samples):
+    ps = PhaseStats()
+    for s in samples:
+        ps.record(s)
+    assert ps.count == len(samples)
+    assert math.isclose(ps.avg_ns, sum(samples) / len(samples),
+                        rel_tol=1e-9)
+    assert ps.worst_ns == max(samples)
+    assert ps.best_ns == min(samples)
+    # 1-ulp slack: float summation can round avg past max/min for
+    # near-identical samples
+    eps = 1e-9 * max(abs(ps.worst_ns), 1.0)
+    assert ps.worst_ns + eps >= ps.avg_ns >= ps.best_ns - eps
+    assert ps.std_ns >= 0
+
+
+def test_tracker_phase_context():
+    t = WcetTracker("t")
+    with t.phase("wait"):
+        time.sleep(0.002)
+    assert t.stats["wait"].count == 1
+    assert t.avg("wait") >= 2e6                   # >= 2ms in ns
+    assert t.jitter("wait") == t.worst("wait") - t.avg("wait")
+
+
+def test_csv_rows():
+    t = WcetTracker("lk")
+    t.record("trigger", 1000.0)
+    t.record("trigger", 3000.0)
+    rows = t.csv_rows()
+    assert len(rows) == 1
+    assert rows[0].startswith("lk,trigger,2,2000,3000")

@@ -1,0 +1,13 @@
+"""Shared fake-device helpers for cluster/FT tests."""
+
+
+class FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+    def __repr__(self):
+        return f"dev{self.id}"
+
+
+def devs(n):
+    return [FakeDev(i) for i in range(n)]
