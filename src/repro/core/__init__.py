@@ -3,12 +3,13 @@
 # accounting), adapted to TPU/JAX per DESIGN.md §2.
 from repro.core import mailbox
 from repro.core.clusters import Cluster, ClusterManager, make_cluster_mesh
-from repro.core.dispatcher import AdmissionError, Completion, Dispatcher
+from repro.core.dispatcher import (AdmissionError, AllClustersFailed,
+                                   Completion, Dispatcher)
 from repro.core.persistent import PersistentRuntime, TraditionalRuntime
 from repro.core.wcet import WcetTracker
 
 __all__ = [
     "mailbox", "Cluster", "ClusterManager", "make_cluster_mesh",
-    "AdmissionError", "Completion", "Dispatcher",
+    "AdmissionError", "AllClustersFailed", "Completion", "Dispatcher",
     "PersistentRuntime", "TraditionalRuntime", "WcetTracker",
 ]

@@ -1,15 +1,25 @@
 """Host-side dispatcher: per-cluster EDF queues, deadline admission control,
-straggler detection, failure handling.
+straggler detection, failure handling — over a pipelined trigger/wait split.
 
 Real-time semantics follow the paper's design goals (§II-A): worst-case
 driven admission (WCET estimates, not averages), spatial pinning of work
 classes to clusters, and accounting of the avg↔worst gap.
+
+Dispatch is asynchronous end to end: ``drain()`` runs an event loop that
+triggers the earliest-deadline item on EVERY cluster with pipeline capacity
+before waiting on any completion (trigger-all → ``wait_any`` → refill), so
+the host keeps feeding mailboxes while devices run. WCET observation,
+straggler flagging, and failure replay all happen at completion-retirement
+time; the ``Mailbox`` keeps the per-cluster in-flight descriptor record, so
+a cluster that dies mid-flight has both its queued AND in-flight work
+replayed on the survivors.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -26,6 +36,10 @@ def now_us() -> int:
 
 class AdmissionError(RuntimeError):
     pass
+
+
+class AllClustersFailed(RuntimeError):
+    """Every cluster is gone — nothing left to replay onto."""
 
 
 @dataclass(order=True)
@@ -56,6 +70,14 @@ class Dispatcher:
                  on_failure: Optional[Callable[[int], None]] = None):
         self.runtimes = dict(runtimes)
         self.queues: dict[int, list[_Item]] = {c: [] for c in runtimes}
+        self.mailbox = mb.Mailbox(max(runtimes) + 1 if runtimes else 0)
+        # FIFO of (item, trigger_us) per cluster — mirrors mailbox.pending
+        self._inflight: dict[int, deque] = {c: deque() for c in runtimes}
+        # when the cluster's previous step retired — service time under
+        # pipelining starts at max(trigger, predecessor retirement), else a
+        # step queued behind its in-flight predecessor double-counts the
+        # predecessor's execution into its own observed WCET
+        self._last_retire_us: dict[int, int] = {}
         # WCET estimate per opcode (µs) — seeded by caller, refined online
         self.wcet_us = dict(wcet_us or {})
         self._observed: dict[int, list[float]] = {}
@@ -68,6 +90,29 @@ class Dispatcher:
         self._pins: dict[str, int] = {}
 
     # ------------------------------------------------------------------
+    def register(self, cluster: int, runtime: PersistentRuntime) -> None:
+        """Attach a runtime as a new cluster (shared-dispatcher clients)."""
+        if cluster in self.runtimes:
+            raise KeyError(f"cluster {cluster} already registered")
+        self.runtimes[cluster] = runtime
+        self.queues[cluster] = []
+        self._inflight[cluster] = deque()
+        self.mailbox.grow(cluster + 1)
+
+    def unregister(self, cluster: int) -> None:
+        """Detach an idle cluster (e.g. its engine is disposing). Refuses
+        while the cluster still holds queued or in-flight work."""
+        if cluster not in self.runtimes:
+            raise KeyError(cluster)
+        if self.queues[cluster] or self._inflight[cluster]:
+            raise RuntimeError(
+                f"cluster {cluster} still has queued/in-flight work")
+        del self.runtimes[cluster]
+        del self.queues[cluster]
+        del self._inflight[cluster]
+        self._last_retire_us.pop(cluster, None)
+        self.mailbox.clear(cluster)
+
     def pin(self, request_class: str, cluster: int) -> None:
         self._pins[request_class] = cluster
 
@@ -75,6 +120,19 @@ class Dispatcher:
         if opcode in self._observed and self._observed[opcode]:
             return float(np.max(self._observed[opcode]))   # observed worst
         return float(self.wcet_us.get(opcode, 1000.0))
+
+    def _load(self, cluster: int) -> int:
+        return len(self.queues[cluster]) + len(self._inflight[cluster])
+
+    def inflight_depth(self, cluster: int) -> int:
+        return len(self._inflight.get(cluster, ()))
+
+    def queue_depth(self, cluster: int) -> int:
+        return len(self.queues.get(cluster, ()))
+
+    @property
+    def busy(self) -> bool:
+        return any(self.queues.values()) or any(self._inflight.values())
 
     # ------------------------------------------------------------------
     def submit(self, desc: mb.WorkDescriptor, cluster: Optional[int] = None,
@@ -85,12 +143,15 @@ class Dispatcher:
         if cluster is None and request_class is not None:
             cluster = self._pins.get(request_class)
         if cluster is None:
-            cluster = min(self.queues, key=lambda c: len(self.queues[c]))
-        if not self.runtimes[cluster]:
+            cluster = min(self.queues, key=self._load)
+        if cluster not in self.runtimes:
             raise KeyError(cluster)
 
         if admission and desc.deadline_us:
             load_us = self._estimate_us(desc.opcode)
+            # in-flight work occupies the cluster regardless of deadline
+            for it, _ in self._inflight[cluster]:
+                load_us += self._estimate_us(it.desc.opcode)
             for it in self.queues[cluster]:
                 if it.deadline_us <= desc.deadline_us:
                     load_us += self._estimate_us(it.desc.opcode)
@@ -105,21 +166,48 @@ class Dispatcher:
         return cluster
 
     # ------------------------------------------------------------------
-    def pump(self, cluster: int) -> Optional[Completion]:
-        """Run the earliest-deadline item on `cluster`; returns completion."""
+    # pipeline internals: trigger / retire / fail
+    # ------------------------------------------------------------------
+    def _trigger_next(self, cluster: int) -> bool:
+        """Trigger the earliest-deadline queued item if the cluster has
+        pipeline capacity. Returns True when a trigger happened. On trigger
+        failure the cluster is retired and its work replayed (re-raises)."""
         q = self.queues[cluster]
-        if not q:
-            return None
-        item = heapq.heappop(q)
         rt = self.runtimes[cluster]
-        t0 = now_us()
+        if not q or len(self._inflight[cluster]) >= getattr(
+                rt, "max_inflight", 1):
+            return False
+        item = heapq.heappop(q)
+        self.mailbox.post(cluster, item.desc.encode())
         try:
             rt.trigger(item.desc)
+        except Exception:
+            self._fail_cluster(cluster)
+            raise
+        self._inflight[cluster].append((item, now_us()))
+        assert self.mailbox.depth(cluster) == len(self._inflight[cluster]), \
+            "mailbox / dispatcher in-flight records desynced"
+        return True
+
+    def _retire(self, cluster: int) -> Completion:
+        """Block on the cluster's OLDEST in-flight step; observe WCET,
+        flag stragglers, ack the mailbox. On wait failure the cluster is
+        retired and queued + in-flight work replayed (re-raises)."""
+        assert self.mailbox.depth(cluster) == len(self._inflight[cluster]), \
+            "mailbox / dispatcher in-flight records desynced"
+        item, t0 = self._inflight[cluster][0]
+        rt = self.runtimes[cluster]
+        try:
             result, _ = rt.wait()
         except Exception:
-            self._handle_failure(cluster, item)
+            self._fail_cluster(cluster)
             raise
-        service = now_us() - t0
+        self._inflight[cluster].popleft()
+        self.mailbox.ack(cluster, mb.THREAD_FINISHED, item.desc.request_id)
+        start = max(t0, self._last_retire_us.get(cluster, 0))
+        end = now_us()
+        self._last_retire_us[cluster] = end
+        service = end - start
         obs = self._observed.setdefault(item.desc.opcode, [])
         obs.append(service)
         if len(obs) > 256:
@@ -129,38 +217,111 @@ class Dispatcher:
             self.stragglers.append((cluster, item.desc.request_id, service))
         comp = Completion(
             request_id=item.desc.request_id, cluster=cluster, result=result,
-            queued_us=t0 - item.submitted_us, service_us=service,
+            queued_us=start - item.submitted_us, service_us=service,
             deadline_us=item.desc.deadline_us,
             met_deadline=(not item.desc.deadline_us
-                          or now_us() <= item.desc.deadline_us))
+                          or end <= item.desc.deadline_us))
         self.completions.append(comp)
         return comp
 
-    def drain(self) -> list[Completion]:
-        """Round-robin pump until all queues are empty."""
-        done = []
-        while any(self.queues.values()):
-            for c in list(self.queues):
-                comp = self.pump(c)
-                if comp:
-                    done.append(comp)
-        return done
+    def _fail_cluster(self, cluster: int) -> None:
+        """Retire a failed cluster and replay its queued AND in-flight work
+        on the survivors. The mailbox's in-flight record is the replay
+        source for mid-flight descriptors — they are pure functions of
+        request state, so replay is idempotent. ``on_failure`` fires only
+        AFTER the replay landed (a raising callback must not lose work)."""
+        inflight_descs = self.mailbox.pending(cluster)
+        inflight_meta = list(self._inflight.pop(cluster, ()))
+        queued = self.queues.pop(cluster, [])
+        del self.runtimes[cluster]
+        self._last_retire_us.pop(cluster, None)
+        self.mailbox.clear(cluster)
+        try:
+            if not self.queues:
+                raise AllClustersFailed("all clusters failed")
+            replay = []
+            for i, desc in enumerate(inflight_descs):
+                sub = (inflight_meta[i][0].submitted_us
+                       if i < len(inflight_meta) else now_us())
+                replay.append(_Item(deadline_us=desc.deadline_us or 2**62,
+                                    seq=next(self._seq), desc=desc,
+                                    submitted_us=sub))
+            replay.extend(queued)
+            for it in replay:
+                tgt = min(self.queues, key=self._load)
+                heapq.heappush(self.queues[tgt], it)
+        finally:
+            if self.on_failure:
+                self.on_failure(cluster)
 
     # ------------------------------------------------------------------
-    def _handle_failure(self, cluster: int, item: _Item) -> None:
-        """Re-queue in-flight + queued work of a failed cluster elsewhere.
-        Descriptors are pure functions of request state — idempotent replay."""
-        pending = [item] + [heapq.heappop(self.queues[cluster])
-                            for _ in range(len(self.queues[cluster]))]
-        del self.queues[cluster]
-        del self.runtimes[cluster]
-        if self.on_failure:
-            self.on_failure(cluster)
-        if not self.queues:
-            raise RuntimeError("all clusters failed")
-        for it in pending:
-            tgt = min(self.queues, key=lambda c: len(self.queues[c]))
-            heapq.heappush(self.queues[tgt], it)
+    def kick(self, cluster: int) -> int:
+        """Trigger queued work up to the cluster's pipeline capacity without
+        waiting. Returns the number of steps entered into flight."""
+        n = 0
+        while self._trigger_next(cluster):
+            n += 1
+        return n
+
+    def poll(self) -> list[Completion]:
+        """Retire every already-completed in-flight step (non-blocking)."""
+        done = []
+        progressed = True
+        while progressed:
+            progressed = False
+            for c in list(self.runtimes):
+                if self._inflight.get(c) and self.runtimes[c].ready():
+                    done.append(self._retire(c))
+                    progressed = True
+        return done
+
+    def wait_any(self) -> Optional[Completion]:
+        """Retire ONE completion: any already-finished step if available,
+        else block on the cluster with the oldest in-flight trigger.
+        Returns None when nothing is in flight."""
+        for c in list(self.runtimes):
+            if self._inflight.get(c) and self.runtimes[c].ready():
+                return self._retire(c)
+        cands = [(infl[0][1], c) for c, infl in self._inflight.items()
+                 if infl]
+        if not cands:
+            return None
+        _, c = min(cands)
+        return self._retire(c)
+
+    def pump(self, cluster: int) -> Optional[Completion]:
+        """Synchronous single step on `cluster`: trigger the earliest item
+        (if any), then retire its oldest in-flight step."""
+        if cluster not in self.runtimes:
+            raise KeyError(cluster)
+        self._trigger_next(cluster)
+        if self._inflight[cluster]:
+            return self._retire(cluster)
+        return None
+
+    def drain(self) -> list[Completion]:
+        """Event loop until all queues and pipelines are empty: fill every
+        cluster's pipeline, retire one completion, refill. Mid-flight
+        cluster failures are absorbed — their work replays on survivors —
+        unless every cluster is gone."""
+        done = []
+        while self.busy:
+            for c in list(self.runtimes):
+                try:
+                    self.kick(c)
+                except AllClustersFailed:
+                    raise
+                except Exception:
+                    continue          # cluster retired; work already replayed
+            try:
+                comp = self.wait_any()
+            except AllClustersFailed:
+                raise
+            except Exception:
+                continue              # cluster retired; work already replayed
+            if comp is not None:
+                done.append(comp)
+        return done
 
     # ------------------------------------------------------------------
     def deadline_stats(self) -> dict:

@@ -18,6 +18,7 @@ Descriptor layout (DESC_WIDTH int32 words per cluster):
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 
 import jax.numpy as jnp
@@ -94,24 +95,67 @@ def is_work(desc) -> bool:
 
 
 class Mailbox:
-    """Host-side dual mailbox for ``n_clusters`` persistent workers."""
+    """Host-side dual mailbox for ``n_clusters`` persistent workers.
+
+    Besides the latest posted/acked descriptor pair per cluster, the mailbox
+    keeps the FIFO of *in-flight* work descriptors (posted WORK, not yet
+    acked). This is the host's authoritative record of what a cluster is
+    holding mid-pipeline: on cluster failure the dispatcher replays exactly
+    ``pending(cluster)`` elsewhere (descriptors are pure functions of request
+    state — idempotent replay).
+    """
 
     def __init__(self, n_clusters: int):
         self.n = n_clusters
         self.to_gpu = np.tile(nop_descriptor(), (n_clusters, 1))
         self.from_gpu = np.zeros((n_clusters, DESC_WIDTH), np.int32)
         self.from_gpu[:, W_STATUS] = THREAD_INIT
+        self.inflight: list[deque] = [deque() for _ in range(n_clusters)]
+
+    def grow(self, n_clusters: int) -> None:
+        """Extend capacity to ``n_clusters`` rows (late cluster register)."""
+        extra = n_clusters - self.n
+        if extra <= 0:
+            return
+        self.to_gpu = np.vstack([self.to_gpu,
+                                 np.tile(nop_descriptor(), (extra, 1))])
+        fg = np.zeros((extra, DESC_WIDTH), np.int32)
+        fg[:, W_STATUS] = THREAD_INIT
+        self.from_gpu = np.vstack([self.from_gpu, fg])
+        self.inflight.extend(deque() for _ in range(extra))
+        self.n = n_clusters
 
     def post(self, cluster: int, desc: np.ndarray) -> None:
         self.to_gpu[cluster] = desc
+        if is_work(desc):
+            self.inflight[cluster].append(np.array(desc, np.int32))
 
     def post_all(self, desc: np.ndarray) -> None:
-        self.to_gpu[:] = desc[None, :]
+        desc = np.asarray(desc)
+        for c in range(self.n):
+            self.post(c, desc)
 
     def ack(self, cluster: int, status: int, request_id: int = 0) -> None:
         self.from_gpu[cluster, W_STATUS] = status
         self.from_gpu[cluster, W_REQID] = request_id
+        q = self.inflight[cluster]
+        if q:
+            q.popleft()
+        if not q:
+            self.to_gpu[cluster] = nop_descriptor()
+
+    def pending(self, cluster: int) -> list[WorkDescriptor]:
+        """Decoded in-flight descriptors of one cluster, oldest first."""
+        return [decode(d) for d in self.inflight[cluster]]
+
+    def depth(self, cluster: int) -> int:
+        return len(self.inflight[cluster])
+
+    def clear(self, cluster: int) -> None:
+        """Drop a failed cluster's record (after the replay is captured)."""
+        self.inflight[cluster].clear()
         self.to_gpu[cluster] = nop_descriptor()
+        self.from_gpu[cluster, W_STATUS] = THREAD_EXIT
 
     def cluster_status(self, cluster: int) -> int:
         return int(self.from_gpu[cluster, W_STATUS])

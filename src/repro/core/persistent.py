@@ -7,10 +7,16 @@ the device program (``lk_step``) switches on the opcode and mutates the
 donated state in place. This is the TPU analogue of LK's "spawn one kernel,
 then poke mailboxes" (DESIGN §2): Trigger = async dispatch enqueue, Wait =
 block_until_ready, exactly the paper's phase split.
+
+The Trigger/Wait split is pipelined: up to ``max_inflight`` steps may be
+enqueued before the first is retired, so the host keeps feeding mailboxes
+while the device runs (the paper's whole point — async Trigger, separate
+Wait). Steps retire strictly in FIFO order; the chain of donated states
+gives XLA the data dependence that serializes them on device.
 """
 from __future__ import annotations
 
-import time
+from collections import deque
 from typing import Any, Callable, Optional, Sequence
 
 import jax
@@ -21,6 +27,15 @@ from repro.core import mailbox as mb
 from repro.core.wcet import WcetTracker
 
 
+def _tree_ready(tree) -> bool:
+    """True when every leaf of an async jax result has materialized."""
+    for leaf in jax.tree.leaves(tree):
+        is_ready = getattr(leaf, "is_ready", None)
+        if is_ready is not None and not is_ready():
+            return False
+    return True
+
+
 class PersistentRuntime:
     """One persistent worker (paper: one SM / one cluster).
 
@@ -28,6 +43,11 @@ class PersistentRuntime:
     return structurally identical (state, result) trees — they are branches
     of one ``lax.switch``. ``result_template`` gives the result structure
     returned for NOP steps (zeros).
+
+    ``max_inflight`` bounds the in-flight pipeline: ``trigger()`` returns at
+    enqueue, ``wait()`` (blocking) / ``poll()`` (non-blocking) retire the
+    oldest step, ``wait_all()`` drains. ``trigger()`` on a full pipeline
+    raises — callers gate on ``can_trigger``.
     """
 
     def __init__(self, work_fns: Sequence[tuple[str, Callable]],
@@ -35,7 +55,10 @@ class PersistentRuntime:
                  tracker: Optional[WcetTracker] = None,
                  mesh=None,
                  state_shardings=None,
-                 donate: bool = True):
+                 donate: bool = True,
+                 max_inflight: int = 2):
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
         self.work_names = [n for n, _ in work_fns]
         self._fns = [f for _, f in work_fns]
         self._result_template = result_template
@@ -44,7 +67,8 @@ class PersistentRuntime:
         self._state_shardings = state_shardings
         self._donate = donate
         self._state = None
-        self._pending = None
+        self.max_inflight = int(max_inflight)
+        self._inflight: deque[tuple[Any, Any]] = deque()
         self._compiled = None
         self.status = mb.THREAD_INIT
         self.steps = 0
@@ -90,10 +114,23 @@ class PersistentRuntime:
         self.status = mb.THREAD_NOP
 
     # ------------------------------------------------------------------
+    @property
+    def inflight(self) -> int:
+        """Number of enqueued-but-unretired steps."""
+        return len(self._inflight)
+
+    @property
+    def can_trigger(self) -> bool:
+        return self._compiled is not None and \
+            len(self._inflight) < self.max_inflight
+
     def trigger(self, desc) -> None:
         """Send one mailbox descriptor (async — returns at enqueue)."""
         assert self._compiled is not None, "boot() first"
-        assert self._pending is None, "previous work not waited"
+        if len(self._inflight) >= self.max_inflight:
+            raise RuntimeError(
+                f"in-flight pipeline full (max_inflight={self.max_inflight});"
+                " retire with wait()/poll() first")
         if isinstance(desc, mb.WorkDescriptor):
             desc = desc.encode()
         with self.tracker.phase("trigger"):
@@ -101,20 +138,42 @@ class PersistentRuntime:
             new_state, result, from_gpu = self._compiled(self._state, dvec)
             # async dispatch: we return as soon as the work is enqueued
             self._state = new_state
-            self._pending = (result, from_gpu)
+            self._inflight.append((result, from_gpu))
+        self.tracker.record_depth(len(self._inflight))
         self.status = mb.THREAD_WORKING
         self.steps += 1
 
+    def ready(self) -> bool:
+        """Non-blocking: has the OLDEST in-flight step finished on device?"""
+        if not self._inflight:
+            return False
+        return _tree_ready(self._inflight[0])
+
     def wait(self):
-        """Block until the triggered step completes; returns (result, status)."""
-        assert self._pending is not None
+        """Block until the oldest in-flight step completes; returns
+        (result, from_gpu). Steps retire strictly in trigger order."""
+        assert self._inflight, "nothing in flight"
         with self.tracker.phase("wait"):
-            result, from_gpu = self._pending
+            result, from_gpu = self._inflight.popleft()
             result = jax.block_until_ready(result)
             from_gpu = np.asarray(from_gpu)
-        self._pending = None
-        self.status = int(from_gpu[mb.W_STATUS])
+        self.status = (mb.THREAD_WORKING if self._inflight
+                       else int(from_gpu[mb.W_STATUS]))
         return result, from_gpu
+
+    def poll(self):
+        """Retire the oldest in-flight step iff it already completed;
+        returns (result, from_gpu) or None."""
+        if not self.ready():
+            return None
+        return self.wait()
+
+    def wait_all(self) -> list:
+        """Drain the pipeline; returns retired (result, from_gpu) in order."""
+        out = []
+        while self._inflight:
+            out.append(self.wait())
+        return out
 
     def run_sync(self, desc):
         self.trigger(desc)
@@ -125,12 +184,21 @@ class PersistentRuntime:
     def state(self):
         return self._state
 
+    def update_state(self, new_state) -> None:
+        """Public state replacement (e.g. prefill insertion in serving).
+
+        Safe under async dispatch as long as ``new_state`` is derived from
+        ``self.state`` (donated lineage): XLA sequences the derivation after
+        every in-flight step that produced it.
+        """
+        assert self._compiled is not None, "boot() first"
+        self._state = new_state
+
     def dispose(self) -> None:
-        """Release device state (paper: Dispose phase)."""
+        """Release device state (paper: Dispose phase). Drains in-flight."""
         with self.tracker.phase("dispose"):
-            if self._pending is not None:
-                jax.block_until_ready(self._pending)
-                self._pending = None
+            while self._inflight:
+                jax.block_until_ready(self._inflight.popleft())
             if self._state is not None:
                 for leaf in jax.tree.leaves(self._state):
                     leaf.delete()

@@ -15,6 +15,11 @@ from dataclasses import dataclass, field
 
 PHASES = ("init", "trigger", "wait", "dispose")
 
+# Dimensionless companion series: in-flight pipeline depth sampled at each
+# trigger. avg > 1 means host/device overlap actually happened; worst is the
+# deepest the pipeline ever got. Not a time phase — report it separately.
+QUEUE_DEPTH = "queue_depth"
+
 
 @dataclass
 class PhaseStats:
@@ -70,6 +75,14 @@ class WcetTracker:
 
     def record(self, name: str, ns: float) -> None:
         self.stats[name].record(ns)
+
+    def record_depth(self, depth: int) -> None:
+        """Sample the in-flight queue depth (see ``QUEUE_DEPTH``)."""
+        self.stats[QUEUE_DEPTH].record(float(depth))
+
+    def time_phases(self) -> dict[str, PhaseStats]:
+        """Stats minus dimensionless series — safe to print as ns."""
+        return {k: v for k, v in self.stats.items() if k != QUEUE_DEPTH}
 
     def avg(self, name: str) -> float:
         return self.stats[name].avg_ns

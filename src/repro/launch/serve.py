@@ -12,6 +12,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core import wcet
 from repro.core.wcet import WcetTracker
 from repro.distributed import ShardCtx
 from repro.models import build
@@ -57,10 +58,18 @@ def main(argv=None):
         print(f"[serve] req{i}: {o}")
     print(f"[serve] completed {len(outs)} requests, "
           f"{sum(len(o) for o in outs)} tokens")
-    for phase, s in tracker.stats.items():
+    for phase, s in tracker.time_phases().items():
         print(f"[serve] {phase:8s} avg={s.avg_ns/1e3:9.1f}us "
               f"worst={s.worst_ns/1e3:9.1f}us jitter={(s.worst_ns-s.avg_ns)/1e3:9.1f}us "
               f"n={s.count}")
+    qd = tracker.stats.get(wcet.QUEUE_DEPTH)
+    if qd is not None:
+        print(f"[serve] queue_depth avg={qd.avg_ns:5.2f} "
+              f"worst={qd.worst_ns:3.0f} n={qd.count}")
+    ds = engine.dispatcher.deadline_stats()
+    print(f"[serve] dispatcher n={ds['n']} met={ds.get('met', 0)} "
+          f"rejected={ds.get('rejected', 0)} "
+          f"stragglers={ds.get('stragglers', 0)}")
     engine.dispose()
     return outs
 

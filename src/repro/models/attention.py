@@ -29,6 +29,20 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import Builder, softcap
 
+# jax >= 0.6 promotes shard_map to jax.shard_map and renames check_rep ->
+# check_vma; older releases ship it under jax.experimental
+if hasattr(jax, "shard_map"):
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _sm_legacy
+    _shard_map = functools.partial(_sm_legacy, check_rep=False)
+
+
+def _axis_size(ax):
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(ax)
+    return jax.lax.psum(1, ax)
+
 
 # ---------------------------------------------------------------------------
 # Params
@@ -469,7 +483,7 @@ def decode_attention_sharded(q, k_cache, v_cache, valid_len, ctx, *,
         # global offset of this shard's cache slice
         idx = 0
         for ax in seq_axes:
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx = idx * _axis_size(ax) + jax.lax.axis_index(ax)
         offset = idx * S_loc
         kx, vx = ks, vs
         if G > 1:
@@ -500,10 +514,10 @@ def decode_attention_sharded(q, k_cache, v_cache, valid_len, ctx, *,
         out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
         return jnp.swapaxes(out, 1, 2).astype(qs.dtype)   # (B,1,H,D)
 
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=mesh,
         in_specs=(q_spec, c_spec, c_spec, len_spec),
-        out_specs=q_spec, check_vma=False,
+        out_specs=q_spec,
     )(q, k_cache, v_cache, valid_len)
 
 
@@ -530,7 +544,7 @@ def cache_update_sharded(k_cache, v_cache, k_new, v_new, positions, ctx):
         S_loc = kc.shape[1]
         idx = 0
         for ax in seq_axes:
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx = idx * _axis_size(ax) + jax.lax.axis_index(ax)
         offset = idx * S_loc
         local_pos = jnp.clip(pos - offset, 0, S_loc - 1)
         owns = (pos >= offset) & (pos < offset + S_loc)    # (B,)
@@ -542,8 +556,8 @@ def cache_update_sharded(k_cache, v_cache, k_new, v_new, positions, ctx):
             return jnp.where(owns[:, None, None, None], updated, c)
         return upd(kc, kn), upd(vc, vn)
 
-    return jax.shard_map(
+    return _shard_map(
         local_fn, mesh=mesh,
         in_specs=(c_spec, c_spec, n_spec, n_spec, p_spec),
-        out_specs=(c_spec, c_spec), check_vma=False,
+        out_specs=(c_spec, c_spec),
     )(k_cache, v_cache, k_new, v_new, positions)

@@ -5,8 +5,15 @@ Boot once: weights + KV caches + slot metadata become device-resident state
 of a ``PersistentRuntime``. Each decode step is then triggered by a mailbox
 descriptor only (DESC_WIDTH int32s) — no weight or cache re-staging — and
 runs ONE lockstep decode for all active slots (continuous batching with
-static shapes). Prefill+insert run as separate resident-state jits (mixed
-continuous batching), mirroring LK's Init vs Trigger split.
+static shapes).
+
+The engine is a *client of the shared Dispatcher*: both ``decode`` and
+``insert`` are opcodes in the runtime's work table, and every step flows
+submit → trigger → completion through the dispatcher's EDF queue and
+mailbox record. Prefill runs host-side (one jit per prompt length), then
+its result is staged into runtime state via the public
+``PersistentRuntime.update_state`` and consumed on device by an OP_INSERT
+step — no private-attribute pokes.
 
 Phases feed the WcetTracker: Init = boot/compile, Trigger = descriptor
 dispatch, Wait = block_until_ready — directly comparable to paper Tables
@@ -15,6 +22,7 @@ II/III via benchmarks/bench_dispatch.py.
 from __future__ import annotations
 
 import functools
+from collections import deque
 from typing import Any, Optional
 
 import jax
@@ -22,17 +30,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mailbox as mb
+from repro.core.dispatcher import Dispatcher
 from repro.core.persistent import PersistentRuntime
 from repro.core.wcet import WcetTracker
 from repro.serving.kv_cache import SlotManager, insert_slot_caches
 
 OP_DECODE = 0
+OP_INSERT = 1
 
 
 class ServingEngine:
     def __init__(self, model, params, *, max_batch: int, max_seq: int,
                  prefill_bucket: int = 64, eos_id: int = -1,
-                 tracker: Optional[WcetTracker] = None):
+                 tracker: Optional[WcetTracker] = None,
+                 dispatcher: Optional[Dispatcher] = None,
+                 cluster_id: int = 0, max_inflight: int = 2):
         self.model = model
         self.cfg = model.cfg
         self.max_batch = max_batch
@@ -41,6 +53,7 @@ class ServingEngine:
         self.eos_id = eos_id
         self.slots = SlotManager(max_batch)
         self.tracker = tracker or WcetTracker("engine")
+        self.cluster = cluster_id
 
         caches = model.init_caches(max_batch, max_seq)
         # own a private copy: engine state is donated through every step /
@@ -52,6 +65,13 @@ class ServingEngine:
             "tokens": jnp.zeros((max_batch, 1), jnp.int32),
             "lengths": jnp.zeros((max_batch,), jnp.int32),
             "active": jnp.zeros((max_batch,), jnp.bool_),
+            # prefill → decode handoff area: one batch-1 cache tree plus the
+            # first generated token; OP_INSERT copies it into a slot on device
+            "staging": {
+                "caches": model.init_caches(1, max_seq),
+                "token": jnp.zeros((), jnp.int32),
+                "length": jnp.zeros((), jnp.int32),
+            },
         }
 
         def decode_fn(state, desc):
@@ -66,29 +86,48 @@ class ServingEngine:
                              lengths=lengths)
             return new_state, nxt
 
+        def insert_fn(state, desc):
+            slot = desc[mb.W_ARG0]
+            stg = state["staging"]
+            caches = insert_slot_caches(state["caches"], stg["caches"], slot)
+            tokens = jax.lax.dynamic_update_slice(
+                state["tokens"], stg["token"].reshape(1, 1), (slot, 0))
+            lengths = jax.lax.dynamic_update_slice(
+                state["lengths"], stg["length"].reshape(1), (slot,))
+            active = jax.lax.dynamic_update_slice(
+                state["active"], jnp.ones((1,), jnp.bool_), (slot,))
+            new_state = dict(state, caches=caches, tokens=tokens,
+                             lengths=lengths, active=active)
+            return new_state, jnp.zeros((max_batch,), jnp.int32)
+
         self.rt = PersistentRuntime(
-            [("decode", decode_fn)],
+            [("decode", decode_fn), ("insert", insert_fn)],
             result_template=jnp.zeros((max_batch,), jnp.int32),
-            tracker=self.tracker)
+            tracker=self.tracker, max_inflight=max_inflight)
         self.rt.boot(state)
 
-        self._insert_jit = jax.jit(self._insert_impl, donate_argnums=(0,))
+        if dispatcher is None:
+            dispatcher = Dispatcher({cluster_id: self.rt})
+        else:
+            # raises if cluster_id is taken — silently adopting another
+            # engine's runtime would decode against the wrong state
+            dispatcher.register(cluster_id, self.rt)
+        self.dispatcher = dispatcher
+
+        self._stage_jit = jax.jit(self._stage_impl, donate_argnums=(0,))
         self._prefill_jits: dict[int, Any] = {}
         self._step_counter = 0
 
     # ------------------------------------------------------------------
     @staticmethod
-    def _insert_impl(state, slot_caches, slot, first_token, length):
-        caches = insert_slot_caches(state["caches"], slot_caches, slot)
-        tokens = jax.lax.dynamic_update_slice(
-            state["tokens"], first_token.reshape(1, 1).astype(jnp.int32),
-            (slot, 0))
-        lengths = jax.lax.dynamic_update_slice(
-            state["lengths"], length.reshape(1).astype(jnp.int32), (slot,))
-        active = jax.lax.dynamic_update_slice(
-            state["active"], jnp.ones((1,), jnp.bool_), (slot,))
-        return dict(state, caches=caches, tokens=tokens, lengths=lengths,
-                    active=active)
+    def _stage_impl(state, slot_caches, first_token, length):
+        stg = {
+            "caches": jax.tree.map(lambda t, c: c.astype(t.dtype),
+                                   state["staging"]["caches"], slot_caches),
+            "token": first_token.astype(jnp.int32).reshape(()),
+            "length": length.astype(jnp.int32).reshape(()),
+        }
+        return dict(state, staging=stg)
 
     def _prefill(self, batch: dict, length: int):
         # exact-length prefill: one compile per distinct prompt length.
@@ -99,6 +138,16 @@ class ServingEngine:
             self._prefill_jits[length] = jax.jit(
                 functools.partial(self.model.prefill, max_seq=self.max_seq))
         return self._prefill_jits[length](self.rt.state["params"], batch)
+
+    def _pump_cluster(self) -> list:
+        """Run this engine's cluster queue to empty; returns completions."""
+        out = []
+        d = self.dispatcher
+        while d.queue_depth(self.cluster) or d.inflight_depth(self.cluster):
+            comp = d.pump(self.cluster)
+            if comp is not None:
+                out.append(comp)
+        return out
 
     # ------------------------------------------------------------------
     def add_request(self, request_id: int, prompt: np.ndarray,
@@ -119,22 +168,31 @@ class ServingEngine:
         logits, caches = self._prefill(batch, L)
         first = jnp.argmax(logits[0, -1, :]).astype(jnp.int32)
         self.slots.slots[slot].generated.append(int(first))
-        state = self._insert_jit(self.rt.state, caches, slot, first,
-                                 jnp.asarray(L, jnp.int32))
-        self.rt._state = state
+        self.rt.update_state(self._stage_jit(
+            self.rt.state, caches, first, jnp.asarray(L, jnp.int32)))
+        self.dispatcher.submit(
+            mb.WorkDescriptor(opcode=OP_INSERT, arg0=slot,
+                              request_id=request_id),
+            cluster=self.cluster, admission=False)
+        # the staging area is single-entry: the insert must be *triggered*
+        # (its step has captured the staged tree) before the next prefill
+        # may overwrite it — pumping to retirement also keeps step() simple
+        self._pump_cluster()
         return slot
 
     # ------------------------------------------------------------------
     def step(self) -> dict[int, int]:
-        """One persistent decode step; returns {slot: new_token} for active
-        slots, frees finished slots."""
+        """One persistent decode step through the dispatcher; returns
+        {slot: new_token} for active slots, frees finished slots."""
         desc = mb.WorkDescriptor(work_id=self._step_counter % 1024,
                                  opcode=OP_DECODE,
                                  request_id=self._step_counter)
         self._step_counter += 1
-        self.rt.trigger(desc)
-        result, _ = self.rt.wait()
-        toks = np.asarray(result)
+        self.dispatcher.submit(desc, cluster=self.cluster, admission=False)
+        comps = self._pump_cluster()
+        comp = next(c for c in reversed(comps)
+                    if c.request_id == desc.request_id)
+        toks = np.asarray(comp.result)
         out = {}
         for i in self.slots.active_indices():
             s = self.slots.slots[i]
@@ -151,7 +209,7 @@ class ServingEngine:
                  extras: Optional[list] = None) -> list[list[int]]:
         """Simple driver: admit all (queueing when full), decode until done
         (continuous batching: freed slots are refilled between steps)."""
-        queue = list(enumerate(prompts))
+        queue = deque(enumerate(prompts))
         record: dict[int, Any] = {}
 
         def admit():
@@ -164,7 +222,7 @@ class ServingEngine:
                 # keep a live reference to the Slot object: it survives
                 # slot reuse (SlotManager replaces, not mutates, on free)
                 record[rid] = self.slots.slots[slot]
-                queue.pop(0)
+                queue.popleft()
 
         admit()
         while self.slots.any_active or queue:
@@ -173,4 +231,7 @@ class ServingEngine:
         return [record[r].generated for r in range(len(prompts))]
 
     def dispose(self):
+        self._pump_cluster()        # retire any leftovers before detaching
+        if self.cluster in self.dispatcher.runtimes:
+            self.dispatcher.unregister(self.cluster)
         self.rt.dispose()

@@ -1,6 +1,8 @@
 """Cluster carving: disjointness, coverage, elastic recarve, pinning."""
 import jax
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.clusters import ClusterManager, _best_2d, make_cluster_mesh

@@ -1,6 +1,8 @@
 """Data pipeline: determinism, host sharding, learnability structure."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import DataConfig, MemmapDataset, ShardedLoader, SyntheticLM

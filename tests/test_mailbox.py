@@ -1,6 +1,8 @@
 """Mailbox protocol (paper Table I): statuses, descriptor codec, host API."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import mailbox as mb

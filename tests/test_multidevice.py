@@ -22,14 +22,13 @@ def run_snippet(code: str, timeout=420) -> str:
 def test_sharded_train_step_matches_single_device():
     print(run_snippet(r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.configs import get_config
 from repro.distributed import ShardCtx
 from repro.models import build
 from repro.training import init_state, make_train_step, opt_config_for, state_shardings
 
 cfg = get_config("llama3-8b").reduced()
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 tokens = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab_size)
 
 # single-device reference
@@ -58,11 +57,11 @@ print("SHARDED TRAIN OK", d, err)
 def test_shard_map_decode_matches_local():
     print(run_snippet(r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.distributed import ShardCtx
 from repro.models.attention import decode_attention_local, decode_attention_sharded, cache_update_sharded
 
-mesh = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 ctx = ShardCtx.for_mesh(mesh, "decode")
 rng = np.random.default_rng(0)
 B, S, Hq, Hkv, D = 4, 64, 8, 2, 16
@@ -95,12 +94,12 @@ print("SHARD_MAP DECODE OK", err, err2)
 def test_elastic_checkpoint_restore_across_meshes():
     print(run_snippet(r"""
 import jax, jax.numpy as jnp, numpy as np, tempfile
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 
 # save sharded over 8 devices as (8,), restore onto a (2,4) mesh sharding
-mesh8 = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
-mesh24 = jax.make_mesh((2, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+mesh8 = jax.make_mesh((8,), ("data",))
+mesh24 = jax.make_mesh((2, 4), ("data", "model"))
 w = jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
 w8 = jax.device_put(w, NamedSharding(mesh8, P("data", None)))
 with tempfile.TemporaryDirectory() as d:

@@ -4,6 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim.optimizer import (AdamWConfig, adamw_init, adamw_update,

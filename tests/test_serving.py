@@ -75,6 +75,25 @@ def test_mamba_engine():
     eng.dispose()
 
 
+def test_shared_dispatcher_two_engines():
+    """Engines sharing one Dispatcher must own distinct clusters; the same
+    cluster_id twice is an error, and dispose() detaches the cluster."""
+    cfg, model, params, eng = make_engine(max_batch=2)
+    with pytest.raises(KeyError):
+        ServingEngine(model, params, max_batch=2, max_seq=64,
+                      dispatcher=eng.dispatcher)          # cluster 0 taken
+    eng2 = ServingEngine(model, params, max_batch=2, max_seq=64,
+                         dispatcher=eng.dispatcher, cluster_id=1)
+    prompts = [np.array([1, 2, 3, 4])]
+    outs = eng2.generate(prompts, max_new_tokens=3)
+    assert outs[0] == sequential_greedy(model, params, prompts[0], 3)
+    eng2.dispose()
+    assert 1 not in eng.dispatcher.runtimes
+    assert 0 in eng.dispatcher.runtimes                   # eng untouched
+    eng.generate(prompts, max_new_tokens=2)
+    eng.dispose()
+
+
 def test_slot_manager():
     sm = SlotManager(2)
     a = sm.allocate(10, 4, 16)

@@ -1,5 +1,7 @@
 """Sharding rules: logical→physical resolution, divisibility fallback."""
 import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.sharding import (Axes, ShardCtx, _fit_axes, axes,

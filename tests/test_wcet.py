@@ -2,6 +2,9 @@
 import math
 import time
 
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.wcet import PhaseStats, WcetTracker
