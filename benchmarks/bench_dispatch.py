@@ -78,10 +78,10 @@ def _make_dispatcher(max_inflight: int) -> Dispatcher:
     return Dispatcher(runtimes)
 
 
-def _submit_all(disp: Dispatcher) -> None:
-    for i in range(PIPE_ITEMS):
-        disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
-                    cluster=i % PIPE_CLUSTERS, admission=False)
+def _submit_all(disp: Dispatcher) -> list:
+    return [disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
+                        cluster=i % PIPE_CLUSTERS, admission=False)
+            for i in range(PIPE_ITEMS)]
 
 
 def _run_pipelined_arm():
@@ -101,7 +101,7 @@ def _run_pipelined_arm():
             for c in disp.runtimes:
                 disp.runtimes[c].run_sync(
                     mb.WorkDescriptor(opcode=0, request_id=999))
-            _submit_all(disp)
+            tickets = _submit_all(disp)
             t0 = time.perf_counter_ns()
             if label == "sync":
                 done = []
@@ -116,6 +116,7 @@ def _run_pipelined_arm():
             stats = disp.deadline_stats()
             assert stats["n"] == PIPE_ITEMS
             assert len(done) == PIPE_ITEMS
+            assert all(t.done() for t in tickets)
             depth = max(rt.tracker.stats["queue_depth"].worst_ns
                         for rt in disp.runtimes.values())
             if best_us is None or elapsed_us < best_us:
@@ -124,6 +125,25 @@ def _run_pipelined_arm():
                 rt.dispose()
         out[label] = (best_us, depth, stats)
     return out
+
+
+def _run_ticket_arm() -> float:
+    """Ticket-resolution cost: submit PIPE_ITEMS, then resolve each ticket
+    in submit order via ``result()`` — the wait_for event pump keeps every
+    pipeline full while the caller blocks on one future at a time."""
+    disp = _make_dispatcher(2)
+    for c in disp.runtimes:
+        disp.runtimes[c].run_sync(mb.WorkDescriptor(opcode=0,
+                                                    request_id=999))
+    tickets = _submit_all(disp)
+    t0 = time.perf_counter_ns()
+    for t in tickets:
+        t.result()
+    elapsed_us = (time.perf_counter_ns() - t0) / 1e3
+    assert all(t.done() for t in tickets)
+    for rt in disp.runtimes.values():
+        rt.dispose()
+    return elapsed_us / PIPE_ITEMS
 
 
 def run() -> list[str]:
@@ -153,4 +173,6 @@ def run() -> list[str]:
                 f"max_depth={depth:.0f}")
     rows.append(f"dispatch_pipeline_speedup,{sync_us/max(pipe_us, 1.0):.2f},"
                 f"met={pipe_stats['met']},stragglers={pipe_stats['stragglers']}")
+    rows.append(f"dispatch_ticket_result_us,{_run_ticket_arm():.1f},"
+                f"items={PIPE_ITEMS},clusters={PIPE_CLUSTERS}")
     return rows

@@ -1,7 +1,10 @@
-# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV and
+# writes the same rows as machine-readable JSON (default BENCH_2.json, or
+# the path given as argv[1]) so the perf trajectory is tracked across PRs.
 #
 #   bench_dispatch    -> paper Tables II (avg) & III (worst): LK vs
-#                        traditional phase costs, single-cluster & full
+#                        traditional phase costs, single-cluster & full,
+#                        plus the pipelined-drain and ticket-result arms
 #   bench_throughput  -> train/serve throughput of the persistent stack
 #   bench_kernels     -> flash-vs-masked attention, executor dispatch rate
 #
@@ -9,20 +12,46 @@
 # not from wall time — this container is CPU-only.
 from __future__ import annotations
 
+import json
 import sys
 import traceback
 
+DEFAULT_JSON = "BENCH_2.json"
 
-def main() -> None:
+
+def _row_record(row: str) -> dict:
+    """``name,us_per_call[,derived...]`` -> JSON record; non-numeric value
+    columns (e.g. ERROR rows) map us_per_call to None."""
+    parts = row.split(",")
+    name = parts[0]
+    try:
+        us = float(parts[1]) if len(parts) > 1 else None
+    except ValueError:
+        us = None
+    return {"name": name, "us_per_call": us,
+            "derived": ",".join(parts[2:]) if len(parts) > 2 else ""}
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = argv[0] if argv else DEFAULT_JSON
     from benchmarks import bench_dispatch, bench_kernels, bench_throughput
     print("name,us_per_call,derived")
+    records = []
     for mod in (bench_dispatch, bench_throughput, bench_kernels):
         try:
             for row in mod.run():
                 print(row, flush=True)
+                records.append(_row_record(row))
         except Exception as e:  # pragma: no cover — keep the harness going
             traceback.print_exc()
-            print(f"{mod.__name__},ERROR,{type(e).__name__}", flush=True)
+            row = f"{mod.__name__},ERROR,{type(e).__name__}"
+            print(row, flush=True)
+            records.append(_row_record(row))
+    with open(json_path, "w") as f:
+        json.dump(records, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {len(records)} rows to {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

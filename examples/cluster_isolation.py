@@ -1,10 +1,13 @@
-"""Cluster pinning & spatial isolation (paper §II-A) on a simulated
-8-device host.
+"""Cluster pinning, spatial isolation & self-healing (paper §II-A) on a
+simulated 8-device host — through the `LkSystem` facade.
 
-Two request classes are pinned to DISJOINT submesh clusters; each cluster
-runs its own persistent runtime whose state lives only on its devices. A
-fault on one cluster triggers an elastic recarve + re-pin without touching
-the other class. Run standalone (sets XLA_FLAGS before jax import):
+Two request classes are pinned to DISJOINT submesh clusters; `LkSystem`
+boots one persistent runtime per cluster and hands out `Ticket` futures for
+every submission. A fault on one cluster triggers the WIRED failure loop
+(dispatcher `on_failure` → `mark_failed` → `recarve` → reboot → `register`)
+before the failed cluster's work is replayed — service continues and no
+ticket is lost, without any recovery code here. Run standalone (sets
+XLA_FLAGS before jax import):
 
     PYTHONPATH=src python examples/cluster_isolation.py
 """
@@ -16,73 +19,66 @@ import jax                                             # noqa: E402
 import jax.numpy as jnp                                # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core import mailbox as mb                   # noqa: E402
-from repro.core.clusters import ClusterManager         # noqa: E402
-from repro.core.dispatcher import Dispatcher           # noqa: E402
-from repro.core.persistent import PersistentRuntime    # noqa: E402
-from repro.distributed.fault_tolerance import ElasticPlanner  # noqa: E402
+from repro.system import LkSystem, WorkClass           # noqa: E402
 
 
-def make_runtime(cluster):
-    def work(state, desc):
-        state = dict(state)
-        state["x"] = jnp.tanh(state["x"] @ state["w"])
-        return state, state["x"].sum()[None]
+def work(state, desc):
+    state = dict(state)
+    state["x"] = jnp.tanh(state["x"] @ state["w"])
+    return state, state["x"].sum()[None]
 
-    sh = NamedSharding(cluster.mesh, P("data", None))
-    rt = PersistentRuntime(
-        [("work", work)], result_template=jnp.zeros((1,), jnp.float32),
-        mesh=cluster.mesh,
-        state_shardings={"w": NamedSharding(cluster.mesh, P(None, None)),
-                         "x": sh})
-    rt.boot({"w": 0.1 * jnp.ones((64, 64)), "x": jnp.ones((8, 64))})
-    return rt
+
+def make_state(cluster):
+    return {"w": 0.1 * jnp.ones((64, 64)), "x": jnp.ones((8, 64))}
+
+
+def make_shardings(cluster):
+    return {"w": NamedSharding(cluster.mesh, P(None, None)),
+            "x": NamedSharding(cluster.mesh, P("data", None))}
 
 
 def main():
-    cm = ClusterManager(n_clusters=2, axis_names=("data",))
+    system = LkSystem(
+        state_factory=make_state,
+        state_shardings_factory=make_shardings,
+        result_template=jnp.zeros((1,), jnp.float32),
+        n_clusters=2, axis_names=("data",),
+        work_classes=[WorkClass("interactive", fn=work, pin=0),
+                      WorkClass("batch", fn=work, pin=1)])
+    cm = system.cm
     print(f"devices={len(cm.all_devices)} clusters="
           f"{[(c.cid, c.n_devices) for c in cm.clusters]} "
           f"disjoint={cm.check_disjoint()}")
 
-    runtimes = {c.cid: make_runtime(c) for c in cm.clusters}
-    for cid, rt in runtimes.items():
-        devs = sorted(d.id for d in rt.state["x"].sharding.device_set)
-        print(f"cluster {cid}: state pinned to devices {devs}")
+    with system:
+        for did, rt in system.runtimes.items():
+            devs = sorted(d.id for d in rt.state["x"].sharding.device_set)
+            print(f"cluster {did}: state pinned to devices {devs}")
 
-    disp = Dispatcher(runtimes)
-    disp.pin("interactive", 0)
-    disp.pin("batch", 1)
-    for i in range(6):
-        disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
-                    request_class="interactive" if i % 2 else "batch")
-    done = disp.drain()
-    by_cluster = {}
-    for c in done:
-        by_cluster.setdefault(c.cluster, []).append(c.request_id)
-    print("completions by cluster:", by_cluster)
-    assert set(by_cluster) == {0, 1}
+        tickets = [system.submit("interactive" if i % 2 else "batch")
+                   for i in range(6)]
+        system.drain()
+        by_cluster = {}
+        for t in tickets:
+            by_cluster.setdefault(t.completion.cluster,
+                                  []).append(t.request_id)
+        print("completions by cluster:", by_cluster)
+        assert len(by_cluster) == 2                   # spatial isolation
 
-    # --- fault: cluster 0 dies; recarve the survivors, re-pin ---
-    print("\nsimulating failure of cluster 0 ...")
-    planner = ElasticPlanner(cm)
-    plan = planner.plan([0])
-    clusters = planner.execute(plan, request_classes=("interactive",
-                                                      "batch"))
-    print(f"recarved into {len(clusters)} cluster(s) over "
-          f"{plan.surviving_devices} devices; re-pin map: {plan.repin}")
-    rt = make_runtime(clusters[0])
-    disp2 = Dispatcher({clusters[0].cid: rt})
-    for i in range(4):
-        disp2.submit(mb.WorkDescriptor(opcode=0, request_id=100 + i))
-    print(f"post-failure completions: {len(disp2.drain())} "
-          f"(service continued)")
-    rt.dispose()
-    for r in runtimes.values():
-        try:
-            r.dispose()
-        except Exception:
-            pass
+        # --- fault: kill cluster 0's runtime mid-service; the system
+        # heals itself (mark_failed -> recarve -> reboot -> register) and
+        # the in-flight + queued work replays with zero lost tickets ---
+        print("\nsimulating failure of cluster 0 ...")
+        post = [system.submit("interactive") for _ in range(4)]
+        system.runtimes[0].dispose()                  # the fault
+        system.drain()
+        assert all(t.done() for t in post)
+        print(f"post-failure completions: {len(post)} (service continued) "
+              f"on clusters {sorted({t.completion.cluster for t in post})}")
+        s = system.stats()
+        print(f"heals={s['heals']} generation={s['generation']} "
+              f"active_clusters={s['clusters']} served={s['n']} "
+              f"met={s['met']}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,15 @@
-"""Quickstart: build an assigned architecture, train a few steps, then serve
-it through the LightKernel persistent engine.
+"""Quickstart: build an assigned architecture, train a few steps, serve it
+through the LightKernel persistent engine, then drive raw persistent work
+through the `LkSystem` facade.
+
+The facade is the recommended entry point for custom workloads — boot and
+dispose are context-managed, submissions return `Ticket` futures, and a
+cluster failure self-heals (recarve + reboot + re-register) with no user
+code:
+
+    with LkSystem(state_factory=..., result_template=...,
+                  work_classes=[WorkClass("my-work", fn=my_fn)]) as system:
+        print(system.submit("my-work").result())
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,6 +22,7 @@ from repro.data import SyntheticLM
 from repro.distributed import ShardCtx
 from repro.models import build
 from repro.serving import ServingEngine
+from repro.system import LkSystem, WorkClass
 from repro.training import init_state, make_train_step, opt_config_for
 
 
@@ -44,6 +55,23 @@ def main():
           f"Trigger {t['trigger'].avg_ns/1e3:.0f}us | "
           f"Wait {t['wait'].avg_ns/1e3:.0f}us  (paper phases)")
     engine.dispose()
+
+    # --- the system facade: declarative work classes + ticket futures ---
+    def scale_fn(state, batch_desc):
+        state = dict(state)
+        state["v"] = state["v"] * 1.5
+        return state, state["v"].sum()[None]
+
+    system = LkSystem(
+        state_factory=lambda cl: {"v": jnp.ones((8,), jnp.float32)},
+        result_template=jnp.zeros((1,), jnp.float32),
+        work_classes=[WorkClass("scale", fn=scale_fn, wcet_us=2000.0)])
+    with system:
+        tickets = [system.submit("scale") for _ in range(3)]
+        print("LkSystem ticket results:",
+              [float(t.result()[0]) for t in tickets])
+        print("LkSystem stats:", {k: system.stats()[k]
+                                  for k in ("n", "met", "clusters")})
 
 
 if __name__ == "__main__":

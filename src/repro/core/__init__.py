@@ -4,12 +4,17 @@
 from repro.core import mailbox
 from repro.core.clusters import Cluster, ClusterManager, make_cluster_mesh
 from repro.core.dispatcher import (AdmissionError, AllClustersFailed,
-                                   Completion, Dispatcher)
-from repro.core.persistent import PersistentRuntime, TraditionalRuntime
+                                   Completion, Dispatcher, Ticket,
+                                   TicketCancelled)
+from repro.core.persistent import (PersistentRuntime, RuntimeProtocol,
+                                   TraditionalRuntime)
+from repro.core.system import LkSystem, WorkClass
 from repro.core.wcet import WcetTracker
 
 __all__ = [
     "mailbox", "Cluster", "ClusterManager", "make_cluster_mesh",
     "AdmissionError", "AllClustersFailed", "Completion", "Dispatcher",
-    "PersistentRuntime", "TraditionalRuntime", "WcetTracker",
+    "Ticket", "TicketCancelled", "LkSystem", "WorkClass",
+    "PersistentRuntime", "RuntimeProtocol", "TraditionalRuntime",
+    "WcetTracker",
 ]

@@ -13,6 +13,13 @@ straggler flagging, and failure replay all happen at completion-retirement
 time; the ``Mailbox`` keeps the per-cluster in-flight descriptor record, so
 a cluster that dies mid-flight has both its queued AND in-flight work
 replayed on the survivors.
+
+Submission is ticket-based: ``submit()`` returns a :class:`Ticket` future
+that resolves at retirement time. Callers hold the ticket for exactly their
+request — there is no shared completion list to scan. ``completions`` and
+``stragglers`` are bounded rolling windows (recent history for debugging);
+``deadline_stats()`` stays exact across any number of served requests via
+running counters.
 """
 from __future__ import annotations
 
@@ -27,7 +34,6 @@ import numpy as np
 
 from repro.core import mailbox as mb
 from repro.core.persistent import PersistentRuntime
-from repro.core.wcet import WcetTracker
 
 
 def now_us() -> int:
@@ -42,12 +48,130 @@ class AllClustersFailed(RuntimeError):
     """Every cluster is gone — nothing left to replay onto."""
 
 
+class TicketCancelled(RuntimeError):
+    """result() was called on a ticket whose work was cancelled."""
+
+
+def _require_runtime(runtime) -> None:
+    """Enforce the runtime protocol: an explicit integer ``max_inflight``
+    pipeline capacity plus trigger/ready/wait. No duck-typed defaults — a
+    runtime that forgets to declare its capacity is a registration error,
+    not a silently serialized cluster."""
+    cap = getattr(runtime, "max_inflight", None)
+    if not isinstance(cap, int) or cap < 1:
+        raise TypeError(
+            f"{type(runtime).__name__} does not satisfy RuntimeProtocol: "
+            "it must declare an integer max_inflight >= 1")
+    for meth in ("trigger", "ready", "wait"):
+        if not callable(getattr(runtime, meth, None)):
+            raise TypeError(
+                f"{type(runtime).__name__} does not satisfy RuntimeProtocol:"
+                f" missing {meth}()")
+
+
+class Ticket:
+    """Future for one submitted work item.
+
+    Resolved by the dispatcher inside ``_retire()`` when the item's step is
+    retired from the pipeline. ``cluster`` tracks the item's CURRENT
+    placement — it is rewritten when a failed cluster's work replays onto a
+    survivor.
+
+    ``result(timeout)`` DRIVES the dispatcher (kick + wait_any) from the
+    calling thread until this ticket resolves; the dispatcher is a
+    single-host-thread design, so whoever blocks on a ticket does the
+    pumping. ``done()``/``completion`` never block. ``cancel()`` withdraws
+    work that is still queued (never-triggered); in-flight work cannot be
+    cancelled. ``on_complete`` callbacks fire at resolve time — a raising
+    callback never loses the completion (every error is kept on
+    ``callback_errors``).
+    """
+
+    __slots__ = ("_dispatcher", "desc", "request_id", "cluster",
+                 "_completion", "_cancelled", "_triggered", "_callbacks",
+                 "callback_errors")
+
+    def __init__(self, dispatcher: "Dispatcher", desc: mb.WorkDescriptor,
+                 cluster: int):
+        self._dispatcher = dispatcher
+        self.desc = desc
+        self.request_id = desc.request_id
+        self.cluster = cluster
+        self._completion: Optional[Completion] = None
+        self._cancelled = False
+        self._triggered = False
+        self._callbacks: list[Callable[["Completion"], None]] = []
+        self.callback_errors: list[BaseException] = []
+
+    # -- inspection ----------------------------------------------------
+    def done(self) -> bool:
+        return self._completion is not None
+
+    def cancelled(self) -> bool:
+        return self._cancelled
+
+    @property
+    def completion(self) -> Optional["Completion"]:
+        return self._completion
+
+    # -- lifecycle -----------------------------------------------------
+    @property
+    def callback_error(self) -> Optional[BaseException]:
+        """First error raised by an on_complete callback, if any."""
+        return self.callback_errors[0] if self.callback_errors else None
+
+    def cancel(self) -> bool:
+        """Withdraw still-queued work. Returns True when the cancellation
+        took (the item will never trigger); False once the item is in
+        flight, already resolved, or already cancelled (idempotent)."""
+        if self._completion is not None or self._triggered or \
+                self._cancelled:
+            return False
+        self._cancelled = True
+        self._dispatcher.cancelled_total += 1
+        # the queued item becomes a tombstone, discarded lazily at pop
+        # time; the per-cluster counter keeps load/admission exact in O(1)
+        self._dispatcher._note_cancelled(self)
+        return True
+
+    def on_complete(self, fn: Callable[["Completion"], None]) -> None:
+        """Register a resolve-time callback; fires immediately if the
+        ticket already resolved."""
+        if self._completion is not None:
+            self._run_callback(fn, self._completion)
+        else:
+            self._callbacks.append(fn)
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """The step's device result; drives the dispatcher until resolved.
+        Raises TicketCancelled / TimeoutError / AllClustersFailed."""
+        return self._dispatcher.wait_for(self, timeout).result
+
+    def wait(self, timeout: Optional[float] = None) -> "Completion":
+        """Like ``result`` but returns the full Completion record."""
+        return self._dispatcher.wait_for(self, timeout)
+
+    # -- dispatcher side -----------------------------------------------
+    def _run_callback(self, fn, comp) -> None:
+        try:
+            fn(comp)
+        except Exception as e:      # a raising callback must not lose work
+            self.callback_errors.append(e)
+
+    def _resolve(self, comp: "Completion") -> None:
+        self._completion = comp
+        for fn in self._callbacks:
+            self._run_callback(fn, comp)
+        self._callbacks.clear()
+
+
 @dataclass(order=True)
 class _Item:
     deadline_us: int
     seq: int
     desc: mb.WorkDescriptor = field(compare=False)
     submitted_us: int = field(compare=False, default=0)
+    ticket: Optional[Ticket] = field(compare=False, default=None)
 
 
 @dataclass
@@ -67,9 +191,15 @@ class Dispatcher:
     def __init__(self, runtimes: dict[int, PersistentRuntime],
                  wcet_us: Optional[dict[int, float]] = None,
                  straggler_factor: float = 4.0,
-                 on_failure: Optional[Callable[[int], None]] = None):
+                 on_failure: Optional[Callable[[int], None]] = None,
+                 completion_window: int = 1024):
+        for rt in runtimes.values():
+            _require_runtime(rt)
         self.runtimes = dict(runtimes)
         self.queues: dict[int, list[_Item]] = {c: [] for c in runtimes}
+        # cancelled-but-still-enqueued tombstones per cluster (lazy heap
+        # deletion): subtracted from every live-depth/load computation
+        self._dead: dict[int, int] = {c: 0 for c in runtimes}
         self.mailbox = mb.Mailbox(max(runtimes) + 1 if runtimes else 0)
         # FIFO of (item, trigger_us) per cluster — mirrors mailbox.pending
         self._inflight: dict[int, deque] = {c: deque() for c in runtimes}
@@ -83,20 +213,43 @@ class Dispatcher:
         self._observed: dict[int, list[float]] = {}
         self.straggler_factor = straggler_factor
         self.on_failure = on_failure
-        self.completions: list[Completion] = []
+        # rolling debug windows — memory stays O(completion_window) no
+        # matter how many requests the dispatcher serves
+        if completion_window < 1:
+            raise ValueError("completion_window must be >= 1")
+        self.completion_window = int(completion_window)
+        self.completions: deque[Completion] = deque(maxlen=completion_window)
+        self.stragglers: deque[tuple[int, int, float]] = deque(
+            maxlen=completion_window)
+        # exact running counters behind deadline_stats()
         self.rejected = 0
-        self.stragglers: list[tuple[int, int, float]] = []
+        self.cancelled_total = 0
+        self._n_completed = 0
+        self._n_met = 0
+        self._n_stragglers = 0
+        self._service_sum_us = 0.0
+        self._service_worst_us = 0.0
         self._seq = itertools.count()
         self._pins: dict[str, int] = {}
+        # clusters draining toward retirement: excluded from auto-placement
+        # and replay targeting (explicit cluster= submits still reach them)
+        self._draining: set[int] = set()
+        # on_failure callbacks that raised: drain()/wait_for() absorb the
+        # deferred exception to keep retiring work, so the error is kept
+        # here for the operator (pump() callers still see it re-raised)
+        self.failure_callback_errors: list[BaseException] = []
 
     # ------------------------------------------------------------------
     def register(self, cluster: int, runtime: PersistentRuntime) -> None:
         """Attach a runtime as a new cluster (shared-dispatcher clients)."""
         if cluster in self.runtimes:
             raise KeyError(f"cluster {cluster} already registered")
+        _require_runtime(runtime)
         self.runtimes[cluster] = runtime
         self.queues[cluster] = []
+        self._dead[cluster] = 0
         self._inflight[cluster] = deque()
+        self._draining.discard(cluster)       # a reused id starts fresh
         self.mailbox.grow(cluster + 1)
 
     def unregister(self, cluster: int) -> None:
@@ -104,17 +257,45 @@ class Dispatcher:
         while the cluster still holds queued or in-flight work."""
         if cluster not in self.runtimes:
             raise KeyError(cluster)
-        if self.queues[cluster] or self._inflight[cluster]:
+        if self.queue_depth(cluster) or self._inflight[cluster]:
             raise RuntimeError(
                 f"cluster {cluster} still has queued/in-flight work")
         del self.runtimes[cluster]
-        del self.queues[cluster]
+        del self.queues[cluster]      # cancelled tombstones go with it
         del self._inflight[cluster]
+        self._dead.pop(cluster, None)
         self._last_retire_us.pop(cluster, None)
+        self._draining.discard(cluster)
         self.mailbox.clear(cluster)
 
     def pin(self, request_class: str, cluster: int) -> None:
         self._pins[request_class] = cluster
+
+    def quiesce(self, cluster: int) -> None:
+        """Stop routing NEW work to a cluster (lame-duck retirement): it
+        is excluded from least-loaded auto-placement and from failure
+        replay, so its backlog can actually drain. Explicit ``cluster=``
+        submissions still reach it."""
+        if cluster not in self.runtimes:
+            raise KeyError(cluster)
+        self._draining.add(cluster)
+
+    def resume(self, cluster: int) -> None:
+        self._draining.discard(cluster)
+
+    def _placement_pool(self) -> list[int]:
+        """Clusters eligible for auto-placement/replay; falls back to all
+        registered clusters when everything is draining."""
+        pool = [c for c in self.queues if c not in self._draining]
+        return pool or list(self.queues)
+
+    def _note_cancelled(self, ticket: Ticket) -> None:
+        """Count a cancelled-but-still-enqueued tombstone so queue_depth,
+        least-loaded placement, and admission exclude it without paying a
+        heap rebuild per cancellation (mass-cancel storms stay O(1) each;
+        the item itself is discarded when it reaches the heap top)."""
+        if ticket.cluster in self._dead:
+            self._dead[ticket.cluster] += 1
 
     def _estimate_us(self, opcode: int) -> float:
         if opcode in self._observed and self._observed[opcode]:
@@ -122,13 +303,15 @@ class Dispatcher:
         return float(self.wcet_us.get(opcode, 1000.0))
 
     def _load(self, cluster: int) -> int:
-        return len(self.queues[cluster]) + len(self._inflight[cluster])
+        return self.queue_depth(cluster) + len(self._inflight[cluster])
 
     def inflight_depth(self, cluster: int) -> int:
         return len(self._inflight.get(cluster, ()))
 
     def queue_depth(self, cluster: int) -> int:
-        return len(self.queues.get(cluster, ()))
+        """LIVE queued items (cancelled tombstones excluded)."""
+        return max(0, len(self.queues.get(cluster, ()))
+                   - self._dead.get(cluster, 0))
 
     @property
     def busy(self) -> bool:
@@ -137,13 +320,14 @@ class Dispatcher:
     # ------------------------------------------------------------------
     def submit(self, desc: mb.WorkDescriptor, cluster: Optional[int] = None,
                request_class: Optional[str] = None,
-               admission: bool = True) -> int:
-        """EDF-enqueue; returns cluster id. Raises AdmissionError when the
-        deadline cannot be met under worst-case estimates."""
+               admission: bool = True) -> Ticket:
+        """EDF-enqueue; returns a Ticket future resolved at retirement.
+        Raises AdmissionError when the deadline cannot be met under
+        worst-case estimates."""
         if cluster is None and request_class is not None:
             cluster = self._pins.get(request_class)
         if cluster is None:
-            cluster = min(self.queues, key=self._load)
+            cluster = min(self._placement_pool(), key=self._load)
         if cluster not in self.runtimes:
             raise KeyError(cluster)
 
@@ -153,6 +337,8 @@ class Dispatcher:
             for it, _ in self._inflight[cluster]:
                 load_us += self._estimate_us(it.desc.opcode)
             for it in self.queues[cluster]:
+                if it.ticket is not None and it.ticket.cancelled():
+                    continue                   # tombstone: no load
                 if it.deadline_us <= desc.deadline_us:
                     load_us += self._estimate_us(it.desc.opcode)
             if now_us() + load_us > desc.deadline_us:
@@ -160,39 +346,55 @@ class Dispatcher:
                 raise AdmissionError(
                     f"deadline {desc.deadline_us} unattainable "
                     f"(worst-case load {load_us:.0f}µs)")
+        ticket = Ticket(self, desc, cluster)
         item = _Item(deadline_us=desc.deadline_us or 2**62,
-                     seq=next(self._seq), desc=desc, submitted_us=now_us())
+                     seq=next(self._seq), desc=desc, submitted_us=now_us(),
+                     ticket=ticket)
         heapq.heappush(self.queues[cluster], item)
-        return cluster
+        return ticket
 
     # ------------------------------------------------------------------
     # pipeline internals: trigger / retire / fail
     # ------------------------------------------------------------------
     def _trigger_next(self, cluster: int) -> bool:
         """Trigger the earliest-deadline queued item if the cluster has
-        pipeline capacity. Returns True when a trigger happened. On trigger
+        pipeline capacity; cancelled items are discarded on pop (lazy
+        heap deletion). Returns True when a trigger happened. On trigger
         failure the cluster is retired and its work replayed (re-raises)."""
         q = self.queues[cluster]
         rt = self.runtimes[cluster]
-        if not q or len(self._inflight[cluster]) >= getattr(
-                rt, "max_inflight", 1):
-            return False
-        item = heapq.heappop(q)
-        self.mailbox.post(cluster, item.desc.encode())
-        try:
-            rt.trigger(item.desc)
-        except Exception:
-            self._fail_cluster(cluster)
-            raise
-        self._inflight[cluster].append((item, now_us()))
-        assert self.mailbox.depth(cluster) == len(self._inflight[cluster]), \
-            "mailbox / dispatcher in-flight records desynced"
-        return True
+        while q:
+            if len(self._inflight[cluster]) >= rt.max_inflight:
+                return False
+            item = heapq.heappop(q)
+            t = item.ticket
+            if t is not None and t.cancelled():
+                if self._dead.get(cluster, 0) > 0:
+                    self._dead[cluster] -= 1
+                continue
+            if t is not None:
+                t._triggered = True
+            self.mailbox.post(cluster, item.desc.encode())
+            try:
+                rt.trigger(item.desc)
+            except Exception:
+                # the descriptor is already in the mailbox record: append
+                # the item so the replay keeps its ticket attached
+                self._inflight[cluster].append((item, now_us()))
+                self._fail_cluster(cluster)
+                raise
+            self._inflight[cluster].append((item, now_us()))
+            assert self.mailbox.depth(cluster) == \
+                len(self._inflight[cluster]), \
+                "mailbox / dispatcher in-flight records desynced"
+            return True
+        return False
 
     def _retire(self, cluster: int) -> Completion:
         """Block on the cluster's OLDEST in-flight step; observe WCET,
-        flag stragglers, ack the mailbox. On wait failure the cluster is
-        retired and queued + in-flight work replayed (re-raises)."""
+        flag stragglers, ack the mailbox, resolve the ticket. On wait
+        failure the cluster is retired and queued + in-flight work
+        replayed (re-raises)."""
         assert self.mailbox.depth(cluster) == len(self._inflight[cluster]), \
             "mailbox / dispatcher in-flight records desynced"
         item, t0 = self._inflight[cluster][0]
@@ -215,6 +417,7 @@ class Dispatcher:
         avg = float(np.mean(obs))
         if len(obs) >= 8 and service > self.straggler_factor * avg:
             self.stragglers.append((cluster, item.desc.request_id, service))
+            self._n_stragglers += 1
         comp = Completion(
             request_id=item.desc.request_id, cluster=cluster, result=result,
             queued_us=start - item.submitted_us, service_us=service,
@@ -222,37 +425,60 @@ class Dispatcher:
             met_deadline=(not item.desc.deadline_us
                           or end <= item.desc.deadline_us))
         self.completions.append(comp)
+        self._n_completed += 1
+        self._n_met += int(comp.met_deadline)
+        self._service_sum_us += service
+        self._service_worst_us = max(self._service_worst_us, service)
+        if item.ticket is not None:
+            item.ticket._resolve(comp)
         return comp
 
     def _fail_cluster(self, cluster: int) -> None:
         """Retire a failed cluster and replay its queued AND in-flight work
         on the survivors. The mailbox's in-flight record is the replay
         source for mid-flight descriptors — they are pure functions of
-        request state, so replay is idempotent. ``on_failure`` fires only
-        AFTER the replay landed (a raising callback must not lose work)."""
+        request state, so replay is idempotent. ``on_failure`` fires BEFORE
+        the replay so a self-healing callback (LkSystem) can register
+        replacement clusters that the replay immediately lands on; a
+        raising callback is deferred — its exception only propagates after
+        the replay landed, so no work is lost either way."""
         inflight_descs = self.mailbox.pending(cluster)
         inflight_meta = list(self._inflight.pop(cluster, ()))
         queued = self.queues.pop(cluster, [])
         del self.runtimes[cluster]
+        self._dead.pop(cluster, None)
         self._last_retire_us.pop(cluster, None)
+        self._draining.discard(cluster)
         self.mailbox.clear(cluster)
-        try:
-            if not self.queues:
-                raise AllClustersFailed("all clusters failed")
-            replay = []
-            for i, desc in enumerate(inflight_descs):
-                sub = (inflight_meta[i][0].submitted_us
-                       if i < len(inflight_meta) else now_us())
-                replay.append(_Item(deadline_us=desc.deadline_us or 2**62,
-                                    seq=next(self._seq), desc=desc,
-                                    submitted_us=sub))
-            replay.extend(queued)
-            for it in replay:
-                tgt = min(self.queues, key=self._load)
-                heapq.heappush(self.queues[tgt], it)
-        finally:
-            if self.on_failure:
+        cb_exc: Optional[BaseException] = None
+        if self.on_failure:
+            try:
                 self.on_failure(cluster)
+            except Exception as e:
+                cb_exc = e
+                self.failure_callback_errors.append(e)
+        if not self.queues:
+            raise AllClustersFailed("all clusters failed") from cb_exc
+        replay = []
+        for i, desc in enumerate(inflight_descs):
+            meta = inflight_meta[i][0] if i < len(inflight_meta) else None
+            sub = meta.submitted_us if meta is not None else now_us()
+            ticket = meta.ticket if meta is not None else None
+            if ticket is not None:
+                ticket._triggered = False       # queued again → cancellable
+            replay.append(_Item(deadline_us=desc.deadline_us or 2**62,
+                                seq=next(self._seq), desc=desc,
+                                submitted_us=sub, ticket=ticket))
+        replay.extend(queued)
+        for it in replay:
+            if it.ticket is not None and it.ticket.cancelled():
+                continue
+            tgt = min(self._placement_pool(), key=self._load)
+            heapq.heappush(self.queues[tgt], it)
+            if it.ticket is not None:
+                it.ticket.cluster = tgt
+        if cb_exc is not None:
+            raise cb_exc
 
     # ------------------------------------------------------------------
     def kick(self, cluster: int) -> int:
@@ -289,6 +515,52 @@ class Dispatcher:
         _, c = min(cands)
         return self._retire(c)
 
+    def _pump_once(self) -> tuple[int, Optional[Completion]]:
+        """One event-pump round: fill every cluster's pipeline, retire one
+        completion. Cluster failures are absorbed (their work is already
+        replayed by ``_fail_cluster``); ``AllClustersFailed`` propagates.
+        Returns (steps entered into flight, retired completion or None)."""
+        progressed = 0
+        for c in list(self.runtimes):
+            try:
+                progressed += self.kick(c)
+            except AllClustersFailed:
+                raise
+            except Exception:
+                progressed += 1   # cluster retired; work already replayed
+        try:
+            comp = self.wait_any()
+        except AllClustersFailed:
+            raise
+        except Exception:
+            return progressed, None  # cluster retired; work replayed
+        return progressed, comp
+
+    def wait_for(self, ticket: Ticket,
+                 timeout: Optional[float] = None) -> Completion:
+        """Drive the dispatcher (fill pipelines, retire completions) until
+        ``ticket`` resolves; returns its Completion. Other tickets retired
+        along the way resolve too — this is the single-host-thread event
+        pump. The timeout is checked between retirements (a step already
+        blocking on device is not interrupted)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if ticket._completion is not None:
+                return ticket._completion
+            if ticket._cancelled:
+                raise TicketCancelled(
+                    f"request {ticket.request_id} was cancelled")
+            if deadline is not None and time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"request {ticket.request_id} unresolved after "
+                    f"{timeout}s")
+            progressed, comp = self._pump_once()
+            if comp is None and not progressed and not self.busy \
+                    and ticket._completion is None and not ticket._cancelled:
+                raise RuntimeError(
+                    f"request {ticket.request_id} cannot resolve: "
+                    "dispatcher is idle and the ticket is not queued")
+
     def pump(self, cluster: int) -> Optional[Completion]:
         """Synchronous single step on `cluster`: trigger the earliest item
         (if any), then retire its oldest in-flight step."""
@@ -306,33 +578,25 @@ class Dispatcher:
         unless every cluster is gone."""
         done = []
         while self.busy:
-            for c in list(self.runtimes):
-                try:
-                    self.kick(c)
-                except AllClustersFailed:
-                    raise
-                except Exception:
-                    continue          # cluster retired; work already replayed
-            try:
-                comp = self.wait_any()
-            except AllClustersFailed:
-                raise
-            except Exception:
-                continue              # cluster retired; work already replayed
+            _, comp = self._pump_once()
             if comp is not None:
                 done.append(comp)
         return done
 
     # ------------------------------------------------------------------
     def deadline_stats(self) -> dict:
-        if not self.completions:
-            return {"n": 0}
-        services = np.array([c.service_us for c in self.completions])
+        """Exact lifetime statistics from running counters — NOT limited
+        to the rolling ``completions`` window. The key set is stable from
+        construction (idle dispatchers report zeros)."""
         return {
-            "n": len(self.completions),
-            "met": sum(c.met_deadline for c in self.completions),
+            "n": self._n_completed,
+            "met": self._n_met,
             "rejected": self.rejected,
-            "avg_service_us": float(services.mean()),
-            "worst_service_us": float(services.max()),
-            "stragglers": len(self.stragglers),
+            "cancelled": self.cancelled_total,
+            "avg_service_us": (self._service_sum_us / self._n_completed
+                               if self._n_completed else 0.0),
+            "worst_service_us": self._service_worst_us,
+            "stragglers": self._n_stragglers,
+            "window": len(self.completions),
+            "failure_callback_errors": len(self.failure_callback_errors),
         }

@@ -17,7 +17,7 @@ gives XLA the data dependence that serializes them on device.
 from __future__ import annotations
 
 from collections import deque
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Protocol, Sequence, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,27 @@ import numpy as np
 
 from repro.core import mailbox as mb
 from repro.core.wcet import WcetTracker
+
+
+@runtime_checkable
+class RuntimeProtocol(Protocol):
+    """The contract the Dispatcher requires of a per-cluster runtime.
+
+    ``max_inflight`` is the EXPLICIT pipeline-capacity attribute every
+    runtime must declare — the dispatcher reads it directly (no duck-typed
+    ``getattr`` fallback), so a runtime that forgets it fails loudly at
+    registration instead of silently serializing its cluster.
+    ``PersistentRuntime`` implements this; test doubles and any future
+    runtime (remote, multi-host, …) must too.
+    """
+
+    max_inflight: int
+
+    def trigger(self, desc) -> None: ...        # async enqueue
+
+    def ready(self) -> bool: ...                # oldest step finished?
+
+    def wait(self) -> tuple: ...                # block; (result, from_gpu)
 
 
 def _tree_ready(tree) -> bool:

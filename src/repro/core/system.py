@@ -1,0 +1,368 @@
+"""LkSystem — the one-stop facade over the persistent-dispatch stack.
+
+Wires ``ClusterManager`` (spatial carving), ``PersistentRuntime`` (one per
+cluster, booted from a declarative work table), and the ticket-based
+``Dispatcher`` into a single context-managed object with a SELF-HEALING
+cluster lifecycle: when a cluster dies mid-flight, the dispatcher's
+``on_failure`` hook drives ``mark_failed`` → ``recarve`` → reboot →
+``register`` before the failed cluster's work is replayed, so the replay
+lands on the rebuilt capacity and no request is lost — all without user
+code.
+
+Usage::
+
+    from repro.system import LkSystem, WorkClass
+
+    sys_ = LkSystem(state_factory=make_state,
+                    result_template=jnp.zeros((1,), jnp.float32),
+                    n_clusters=2)
+    sys_.register(WorkClass("interactive", fn=decode_fn, wcet_us=800.0,
+                            pin=0))
+    sys_.register(WorkClass("batch", fn=train_fn))
+    with sys_:                              # boot: one runtime per cluster
+        t = sys_.submit("interactive", deadline_us=now_us() + 10_000)
+        print(t.result())                   # ticket future, resolved at
+                                            # retirement
+
+Healing policy: the system restores the ORIGINAL cluster count (clamped to
+the surviving device fleet — spares fill in first, elastic shrink
+otherwise). After a recarve, a surviving runtime whose device partition is
+unchanged is adopted as-is (its device-resident state keeps serving); a
+runtime whose partition was rearranged becomes a *lame duck* — it finishes
+its queued/in-flight backlog, then is unregistered and disposed by
+``reap()``.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence
+
+from repro.core import mailbox as mb
+from repro.core.clusters import Cluster, ClusterManager
+from repro.core.dispatcher import Dispatcher, Ticket
+from repro.core.persistent import PersistentRuntime, RuntimeProtocol
+
+
+@dataclass(frozen=True)
+class WorkClass:
+    """Declarative registration of one kind of work.
+
+    name     — request-class name; also the opcode's row name in every
+               runtime's work table.
+    fn       — ``fn(state, desc) -> (state, result)``; compiled as one
+               branch of the shared ``lax.switch`` on every cluster (every
+               cluster can run every class — that is what makes failure
+               replay universal).
+    wcet_us  — seed worst-case execution time for deadline admission;
+               refined online from observed worsts.
+    pin      — manager-cluster index for spatial pinning (paper §II-A), or
+               None for least-loaded placement.
+    """
+
+    name: str
+    fn: Callable[[Any, Any], tuple]
+    wcet_us: Optional[float] = None
+    pin: Optional[int] = None
+
+
+class LkSystem:
+    """Context-managed boot/dispose of one PersistentRuntime per
+    ClusterManager cluster, with ticket submission and a wired
+    self-healing failure loop."""
+
+    def __init__(self, *, state_factory: Callable[[Cluster], Any],
+                 result_template: Any,
+                 cluster_manager: Optional[ClusterManager] = None,
+                 devices: Optional[Sequence] = None,
+                 n_clusters: int = 1,
+                 axis_names: tuple = ("data",),
+                 cluster_shape: Optional[tuple] = None,
+                 work_classes: Sequence[WorkClass] = (),
+                 max_inflight: int = 2,
+                 completion_window: int = 1024,
+                 straggler_factor: float = 4.0,
+                 state_shardings_factory: Optional[
+                     Callable[[Cluster], Any]] = None,
+                 runtime_factory: Optional[
+                     Callable[[Cluster], RuntimeProtocol]] = None,
+                 heal: bool = True):
+        self.cm = cluster_manager if cluster_manager is not None else \
+            ClusterManager(devices=devices, n_clusters=n_clusters,
+                           axis_names=axis_names,
+                           cluster_shape=cluster_shape)
+        self._target_clusters = len(self.cm.clusters)
+        self._state_factory = state_factory
+        self._result_template = result_template
+        self._max_inflight = int(max_inflight)
+        self._completion_window = int(completion_window)
+        self._straggler_factor = straggler_factor
+        self._shardings_factory = state_shardings_factory
+        self._runtime_factory = runtime_factory
+        self._heal = heal
+        self._classes: dict[str, WorkClass] = {}
+        self._opcodes: dict[str, int] = {}
+        self.dispatcher: Optional[Dispatcher] = None
+        self._runtimes: dict[int, RuntimeProtocol] = {}
+        self._cluster_of: dict[int, Cluster] = {}
+        self._lame_ducks: set[int] = set()
+        self._next_dispatch_id = itertools.count()
+        self._req_ids = itertools.count(1)
+        self.heals = 0
+        for wc in work_classes:
+            self.register(wc)
+
+    # -- declarative registration (pre-boot) ---------------------------
+    def register(self, work_class: WorkClass) -> int:
+        """Register a work class; returns its opcode. The combined work
+        table is compiled into every runtime at boot, so registration
+        closes when the system boots."""
+        if self.dispatcher is not None:
+            raise RuntimeError("register() before boot(): the work table "
+                               "is compiled into every cluster's runtime")
+        if work_class.name in self._classes:
+            raise KeyError(f"work class {work_class.name!r} already "
+                           "registered")
+        opcode = len(self._classes)
+        self._classes[work_class.name] = work_class
+        self._opcodes[work_class.name] = opcode
+        return opcode
+
+    @property
+    def booted(self) -> bool:
+        return self.dispatcher is not None
+
+    @property
+    def runtimes(self) -> dict[int, RuntimeProtocol]:
+        """Live runtimes by dispatcher cluster id (read-only view)."""
+        return dict(self._runtimes)
+
+    @property
+    def lame_ducks(self) -> set[int]:
+        return set(self._lame_ducks)
+
+    def cluster_ids(self) -> list[int]:
+        """Dispatcher cluster ids currently accepting new work."""
+        return [d for d in self._runtimes if d not in self._lame_ducks]
+
+    # -- lifecycle ------------------------------------------------------
+    def boot(self) -> "LkSystem":
+        """Init phase for the whole system: one runtime per healthy
+        cluster, all registered with a fresh ticket dispatcher."""
+        if self.dispatcher is not None:
+            raise RuntimeError("already booted")
+        if not self._classes:
+            raise RuntimeError("register at least one WorkClass before "
+                               "boot()")
+        cids = {c.cid for c in self.cm.healthy_clusters()}
+        for name, wc in self._classes.items():
+            # the modulo fallback in _repin exists only for post-heal cid
+            # renumbering — at boot an unmatched pin is a config error, not
+            # something to silently remap (it would break spatial isolation)
+            if wc.pin is not None and wc.pin not in cids:
+                raise ValueError(
+                    f"WorkClass {name!r} pins to cluster {wc.pin}, but "
+                    f"only clusters {sorted(cids)} exist")
+        wcet = {self._opcodes[n]: wc.wcet_us
+                for n, wc in self._classes.items() if wc.wcet_us}
+        self.dispatcher = Dispatcher(
+            {}, wcet_us=wcet, straggler_factor=self._straggler_factor,
+            completion_window=self._completion_window,
+            on_failure=self._on_cluster_failure if self._heal else None)
+        for cl in self.cm.healthy_clusters():
+            self._add_cluster(cl)
+        self._repin()
+        return self
+
+    def __enter__(self) -> "LkSystem":
+        return self.boot() if self.dispatcher is None else self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.dispose()
+
+    def dispose(self) -> None:
+        """Drain outstanding work, then unregister and dispose every
+        runtime (paper Dispose phase, system-wide)."""
+        if self.dispatcher is None:
+            return
+        try:
+            self.dispatcher.drain()
+        except Exception:
+            pass                  # partial drain: dispose what remains
+        for did in list(self._runtimes):
+            rt = self._runtimes.pop(did)
+            self._cluster_of.pop(did, None)
+            self._lame_ducks.discard(did)
+            if did in self.dispatcher.runtimes:
+                try:
+                    self.dispatcher.unregister(did)
+                except Exception:
+                    pass
+            try:
+                rt.dispose()
+            except Exception:
+                pass
+        self.dispatcher = None
+
+    # -- submission -----------------------------------------------------
+    def submit(self, work_class: str, *, arg0: int = 0, arg1: int = 0,
+               seq_len: int = 0, deadline_us: int = 0,
+               request_id: Optional[int] = None,
+               admission: Optional[bool] = None) -> Ticket:
+        """Submit one item of ``work_class``; returns its Ticket.
+        Admission control defaults to on exactly when a deadline is set."""
+        self._require_booted()
+        if work_class not in self._classes:
+            raise KeyError(work_class)
+        self.reap()     # retire any lame duck whose backlog has drained —
+        #                 result()-only callers never pass through drain()
+        desc = mb.WorkDescriptor(
+            opcode=self._opcodes[work_class], arg0=arg0, arg1=arg1,
+            seq_len=seq_len,
+            request_id=request_id if request_id is not None
+            else next(self._req_ids),
+            deadline_us=deadline_us)
+        return self.dispatcher.submit(
+            desc, request_class=work_class,
+            admission=bool(deadline_us) if admission is None else admission)
+
+    def drain(self) -> list:
+        """Run every queue and pipeline to empty; reap retired lame
+        ducks; returns the completions."""
+        self._require_booted()
+        out = self.dispatcher.drain()
+        self.reap()
+        return out
+
+    def poll(self) -> list:
+        self._require_booted()
+        out = self.dispatcher.poll()
+        self.reap()
+        return out
+
+    def _require_booted(self) -> None:
+        if self.dispatcher is None:
+            raise RuntimeError("boot() first")
+
+    # -- self-healing failure loop --------------------------------------
+    def _on_cluster_failure(self, did: int) -> None:
+        """Dispatcher ``on_failure`` hook. Runs BEFORE the failed
+        cluster's work is replayed, so capacity registered here is a
+        replay target: mark_failed → recarve → reboot → register."""
+        cl = self._cluster_of.pop(did, None)
+        rt = self._runtimes.pop(did, None)
+        self._lame_ducks.discard(did)
+        if rt is not None:
+            try:
+                rt.dispose()
+            except Exception:
+                pass              # the runtime is already dead
+        if cl is None or not any(c is cl for c in self.cm.clusters):
+            # a lame duck died: its Cluster object is from a previous
+            # generation and its devices already belong to the current
+            # carve (which has live runtimes) — nothing to mark failed or
+            # rebuild, the dispatcher replays onto the live clusters
+            return
+        self.heals += 1
+        self.cm.mark_failed(cl.cid)
+        n_dev = sum(c.n_devices for c in self.cm.healthy_clusters()) \
+            + len(self.cm.spare_devices)
+        if n_dev == 0:
+            return                # nothing left; dispatcher raises
+        clusters = self.cm.recarve(
+            max(1, min(self._target_clusters, n_dev)))
+        # adopt survivors whose device partition is unchanged; boot fresh
+        # runtimes for new partitions; displaced survivors become lame
+        # ducks (they finish their backlog, then reap() retires them)
+        live_by_devs = {
+            frozenset(map(id, c.devices)): d
+            for d, c in self._cluster_of.items()
+            if d not in self._lame_ducks}
+        for cl_new in clusters:
+            key = frozenset(map(id, cl_new.devices))
+            adopted = live_by_devs.pop(key, None)
+            if adopted is not None:
+                self._cluster_of[adopted] = cl_new
+            else:
+                self._add_cluster(cl_new)
+        for duck in live_by_devs.values():
+            self._lame_ducks.add(duck)
+            self.dispatcher.quiesce(duck)     # drain, don't feed
+        self._repin()
+
+    def reap(self) -> list[int]:
+        """Unregister + dispose lame-duck clusters whose backlog drained;
+        returns the dispatcher ids reaped."""
+        if self.dispatcher is None:
+            return []
+        reaped = []
+        for did in list(self._lame_ducks):
+            if did not in self.dispatcher.runtimes:
+                self._lame_ducks.discard(did)
+                continue
+            if self.dispatcher.queue_depth(did) or \
+                    self.dispatcher.inflight_depth(did):
+                continue
+            self.dispatcher.unregister(did)
+            rt = self._runtimes.pop(did, None)
+            self._cluster_of.pop(did, None)
+            self._lame_ducks.discard(did)
+            if rt is not None:
+                try:
+                    rt.dispose()
+                except Exception:
+                    pass
+            reaped.append(did)
+        return reaped
+
+    # -- internals ------------------------------------------------------
+    def _add_cluster(self, cl: Cluster) -> int:
+        did = next(self._next_dispatch_id)
+        rt = self._make_runtime(cl)
+        self.dispatcher.register(did, rt)
+        self._runtimes[did] = rt
+        self._cluster_of[did] = cl
+        return did
+
+    def _make_runtime(self, cl: Cluster) -> RuntimeProtocol:
+        if self._runtime_factory is not None:
+            return self._runtime_factory(cl)
+        shardings = (self._shardings_factory(cl)
+                     if self._shardings_factory is not None else None)
+        rt = PersistentRuntime(
+            [(name, wc.fn) for name, wc in self._classes.items()],
+            result_template=self._result_template,
+            mesh=cl.mesh if shardings is not None else None,
+            state_shardings=shardings,
+            max_inflight=self._max_inflight)
+        rt.boot(self._state_factory(cl))
+        return rt
+
+    def _repin(self) -> None:
+        """Map explicit WorkClass pins (manager-cluster indices) onto the
+        dispatcher ids currently accepting work."""
+        active = {d: c for d, c in self._cluster_of.items()
+                  if d not in self._lame_ducks
+                  and d in self.dispatcher.runtimes}
+        if not active:
+            return
+        dids = sorted(active)
+        for name, wc in self._classes.items():
+            if wc.pin is None:
+                continue
+            target = next((d for d in dids if active[d].cid == wc.pin),
+                          dids[wc.pin % len(dids)])
+            self.dispatcher.pin(name, target)
+
+    # -- reporting ------------------------------------------------------
+    def stats(self) -> dict:
+        """Dispatcher deadline stats plus system lifecycle counters."""
+        s = dict(self.dispatcher.deadline_stats()) \
+            if self.dispatcher is not None else {"n": 0}
+        s.update({
+            "heals": self.heals,
+            "clusters": len(self.cluster_ids()) if self.dispatcher else 0,
+            "lame_ducks": len(self._lame_ducks),
+            "generation": self.cm.generation,
+        })
+        return s

@@ -28,6 +28,9 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--completion-window", type=int, default=1024,
+                    help="rolling completion/straggler window kept by the "
+                         "dispatcher (stats stay exact beyond it)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -38,7 +41,8 @@ def main(argv=None):
 
     tracker = WcetTracker("serve")
     engine = ServingEngine(model, params, max_batch=args.max_batch,
-                           max_seq=args.max_seq, tracker=tracker)
+                           max_seq=args.max_seq, tracker=tracker,
+                           completion_window=args.completion_window)
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
                for _ in range(args.requests)]
@@ -69,7 +73,8 @@ def main(argv=None):
     ds = engine.dispatcher.deadline_stats()
     print(f"[serve] dispatcher n={ds['n']} met={ds.get('met', 0)} "
           f"rejected={ds.get('rejected', 0)} "
-          f"stragglers={ds.get('stragglers', 0)}")
+          f"stragglers={ds.get('stragglers', 0)} "
+          f"window={ds.get('window', 0)}/{engine.dispatcher.completion_window}")
     engine.dispose()
     return outs
 

@@ -9,11 +9,13 @@ static shapes).
 
 The engine is a *client of the shared Dispatcher*: both ``decode`` and
 ``insert`` are opcodes in the runtime's work table, and every step flows
-submit → trigger → completion through the dispatcher's EDF queue and
-mailbox record. Prefill runs host-side (one jit per prompt length), then
-its result is staged into runtime state via the public
-``PersistentRuntime.update_state`` and consumed on device by an OP_INSERT
-step — no private-attribute pokes.
+submit → ticket → trigger → retire → resolve through the dispatcher's EDF
+queue and mailbox record. Each submission's ``Ticket`` future carries its
+own result — the engine never scans a shared completion list, so a
+long-running server's dispatcher memory stays O(completion window).
+Prefill runs host-side (one jit per prompt length), then its result is
+staged into runtime state via the public ``PersistentRuntime.update_state``
+and consumed on device by an OP_INSERT step — no private-attribute pokes.
 
 Phases feed the WcetTracker: Init = boot/compile, Trigger = descriptor
 dispatch, Wait = block_until_ready — directly comparable to paper Tables
@@ -44,7 +46,15 @@ class ServingEngine:
                  prefill_bucket: int = 64, eos_id: int = -1,
                  tracker: Optional[WcetTracker] = None,
                  dispatcher: Optional[Dispatcher] = None,
-                 cluster_id: int = 0, max_inflight: int = 2):
+                 cluster_id: int = 0, max_inflight: int = 2,
+                 completion_window: Optional[int] = None):
+        if completion_window is not None:
+            if dispatcher is not None:
+                raise ValueError(
+                    "completion_window configures the engine-owned "
+                    "dispatcher; set it on the shared Dispatcher instead")
+            if completion_window < 1:
+                raise ValueError("completion_window must be >= 1")
         self.model = model
         self.cfg = model.cfg
         self.max_batch = max_batch
@@ -107,7 +117,10 @@ class ServingEngine:
         self.rt.boot(state)
 
         if dispatcher is None:
-            dispatcher = Dispatcher({cluster_id: self.rt})
+            dispatcher = Dispatcher(
+                {cluster_id: self.rt},
+                completion_window=completion_window
+                if completion_window is not None else 1024)
         else:
             # raises if cluster_id is taken — silently adopting another
             # engine's runtime would decode against the wrong state
@@ -170,29 +183,30 @@ class ServingEngine:
         self.slots.slots[slot].generated.append(int(first))
         self.rt.update_state(self._stage_jit(
             self.rt.state, caches, first, jnp.asarray(L, jnp.int32)))
-        self.dispatcher.submit(
+        ticket = self.dispatcher.submit(
             mb.WorkDescriptor(opcode=OP_INSERT, arg0=slot,
                               request_id=request_id),
             cluster=self.cluster, admission=False)
         # the staging area is single-entry: the insert must be *triggered*
         # (its step has captured the staged tree) before the next prefill
-        # may overwrite it — pumping to retirement also keeps step() simple
-        self._pump_cluster()
+        # may overwrite it — resolving the ticket (retire) keeps step()
+        # simple and the staging hand-off race-free
+        ticket.result()
         return slot
 
     # ------------------------------------------------------------------
     def step(self) -> dict[int, int]:
         """One persistent decode step through the dispatcher; returns
-        {slot: new_token} for active slots, frees finished slots."""
+        {slot: new_token} for active slots, frees finished slots. The
+        step's ticket delivers exactly this request's result — no
+        completion-list scanning."""
         desc = mb.WorkDescriptor(work_id=self._step_counter % 1024,
                                  opcode=OP_DECODE,
                                  request_id=self._step_counter)
         self._step_counter += 1
-        self.dispatcher.submit(desc, cluster=self.cluster, admission=False)
-        comps = self._pump_cluster()
-        comp = next(c for c in reversed(comps)
-                    if c.request_id == desc.request_id)
-        toks = np.asarray(comp.result)
+        ticket = self.dispatcher.submit(desc, cluster=self.cluster,
+                                        admission=False)
+        toks = np.asarray(ticket.result())
         out = {}
         for i in self.slots.active_indices():
             s = self.slots.slots[i]

@@ -1,0 +1,8 @@
+"""Top-level alias for the system facade: the ROADMAP-facing entry point.
+
+    from repro.system import LkSystem, WorkClass
+"""
+from repro.core.dispatcher import Ticket, TicketCancelled
+from repro.core.system import LkSystem, WorkClass
+
+__all__ = ["LkSystem", "WorkClass", "Ticket", "TicketCancelled"]

@@ -47,17 +47,17 @@ def test_admission_rejects_impossible_deadline():
 
 def test_least_loaded_placement():
     disp = Dispatcher({0: make_rt(), 1: make_rt()})
-    c1 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1))
-    c2 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=2))
-    assert {c1, c2} == {0, 1}
+    t1 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1))
+    t2 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=2))
+    assert {t1.cluster, t2.cluster} == {0, 1}
 
 
 def test_pinning():
     disp = Dispatcher({0: make_rt(), 1: make_rt()})
     disp.pin("interactive", 1)
-    c = disp.submit(mb.WorkDescriptor(opcode=0, request_id=9),
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=9),
                     request_class="interactive")
-    assert c == 1
+    assert t.cluster == 1
 
 
 def test_failure_requeues_to_survivor():
@@ -81,8 +81,70 @@ def test_failure_requeues_to_survivor():
 
 def test_deadline_stats():
     disp = Dispatcher({0: make_rt()})
+    idle = disp.deadline_stats()             # stable key set from day one
+    assert idle["n"] == 0 and idle["met"] == 0 and idle["window"] == 0
+    assert idle["avg_service_us"] == 0.0
     disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), admission=False)
     disp.drain()
     s = disp.deadline_stats()
+    assert set(s) == set(idle)
     assert s["n"] == 1 and s["met"] == 1
     assert s["worst_service_us"] >= s["avg_service_us"]
+
+
+def test_completion_window_bounded_stats_exact():
+    """The rolling windows cap memory; deadline_stats() stays exact via
+    running counters."""
+    disp = Dispatcher({0: make_rt()}, completion_window=4)
+    for rid in range(10):
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=rid),
+                    admission=False)
+    done = disp.drain()
+    assert len(done) == 10
+    assert len(disp.completions) == 4                  # bounded window
+    assert [c.request_id for c in disp.completions] == [6, 7, 8, 9]
+    s = disp.deadline_stats()
+    assert s["n"] == 10 and s["met"] == 10             # exact, not windowed
+    assert s["window"] == 4
+    assert s["worst_service_us"] >= s["avg_service_us"] > 0
+
+
+def test_quiesce_excludes_from_auto_placement():
+    """A quiesced (lame-duck) cluster gets no least-loaded traffic; only
+    explicit cluster= submissions reach it. With everything draining the
+    pool falls back to all clusters."""
+    disp = Dispatcher({0: make_rt(), 1: make_rt()})
+    disp.quiesce(0)
+    ts = [disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
+                      admission=False) for i in range(3)]
+    assert all(t.cluster == 1 for t in ts)
+    t0 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=9), cluster=0,
+                     admission=False)
+    assert t0.cluster == 0
+    disp.quiesce(1)
+    t_any = disp.submit(mb.WorkDescriptor(opcode=0, request_id=10),
+                        admission=False)
+    assert t_any.cluster in (0, 1)                 # fallback: all draining
+    with pytest.raises(KeyError):
+        disp.quiesce(5)
+    disp.resume(1)
+    assert len(disp.drain()) == 5
+    for rt in disp.runtimes.values():
+        rt.dispose()
+
+
+def test_runtime_protocol_enforced():
+    """A runtime without an explicit max_inflight is a registration-time
+    TypeError (no duck-typed capacity defaults)."""
+    class NoCapacity:
+        def trigger(self, desc): ...
+        def ready(self): return False
+        def wait(self): ...
+
+    with pytest.raises(TypeError, match="max_inflight"):
+        Dispatcher({0: NoCapacity()})
+    disp = Dispatcher({0: make_rt()})
+    with pytest.raises(TypeError, match="max_inflight"):
+        disp.register(1, NoCapacity())
+    for rt in disp.runtimes.values():
+        rt.dispose()

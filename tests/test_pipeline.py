@@ -240,8 +240,9 @@ def test_trigger_failure_in_drain_replays():
 
 
 def test_raising_on_failure_callback_does_not_lose_work():
-    """Replay lands BEFORE on_failure fires — a raising callback must not
-    drop the failed cluster's queued or in-flight descriptors."""
+    """on_failure fires before the replay (so a healing callback can add
+    capacity), but a RAISING callback is deferred — its exception only
+    propagates after the replay landed, so no descriptor is dropped."""
     log = []
     disp = Dispatcher({0: FakeRuntime(0, log, fail_wait=True),
                        1: FakeRuntime(1, log)})
@@ -256,6 +257,10 @@ def test_raising_on_failure_callback_does_not_lose_work():
     done = disp.drain()
     assert sorted(c.request_id for c in done) == [1, 2, 3]
     assert all(c.cluster == 1 for c in done)
+    # drain absorbed the callback's exception to keep retiring work, but
+    # the healing failure is recorded for the operator
+    assert len(disp.failure_callback_errors) == 1
+    assert disp.deadline_stats()["failure_callback_errors"] == 1
 
 
 def test_unregister_idle_cluster():
@@ -313,9 +318,9 @@ def test_register_late_cluster():
     disp = Dispatcher({0: FakeRuntime(0, [])})
     disp.register(2, FakeRuntime(2, []))
     assert disp.mailbox.n == 3
-    c = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), cluster=2,
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), cluster=2,
                     admission=False)
-    assert c == 2
+    assert t.cluster == 2
     assert len(disp.drain()) == 1
     with pytest.raises(KeyError):
         disp.register(2, FakeRuntime(2, []))

@@ -82,6 +82,13 @@ def test_shared_dispatcher_two_engines():
     with pytest.raises(KeyError):
         ServingEngine(model, params, max_batch=2, max_seq=64,
                       dispatcher=eng.dispatcher)          # cluster 0 taken
+    with pytest.raises(ValueError, match="completion_window"):
+        ServingEngine(model, params, max_batch=2, max_seq=64,
+                      dispatcher=eng.dispatcher, cluster_id=1,
+                      completion_window=8)      # window ≠ shared dispatcher
+    with pytest.raises(ValueError, match="completion_window"):
+        ServingEngine(model, params, max_batch=2, max_seq=64,
+                      completion_window=0)      # explicit invalid value
     eng2 = ServingEngine(model, params, max_batch=2, max_seq=64,
                          dispatcher=eng.dispatcher, cluster_id=1)
     prompts = [np.array([1, 2, 3, 4])]

@@ -1,0 +1,319 @@
+"""Ticket-based submission: resolve-at-retirement, cancel-while-queued,
+out-of-order completion across clusters, callback semantics, replay
+keeping tickets attached, result(timeout)."""
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core.dispatcher import (Dispatcher, Ticket, TicketCancelled)
+from repro.core.persistent import PersistentRuntime
+
+
+class FakeRuntime:
+    """RuntimeProtocol double; readiness can be gated for ordering tests."""
+
+    def __init__(self, cid, log, max_inflight=2, fail_wait=False,
+                 gated=False):
+        self.cid = cid
+        self.log = log
+        self.max_inflight = max_inflight
+        self.fail_wait = fail_wait
+        self.gate_open = not gated
+        self._q = deque()
+
+    def trigger(self, desc):
+        if len(self._q) >= self.max_inflight:
+            raise RuntimeError("full")
+        self.log.append(("trigger", self.cid, desc.request_id))
+        self._q.append(desc)
+
+    def ready(self):
+        return bool(self._q) and self.gate_open and not self.fail_wait
+
+    def wait(self):
+        desc = self._q.popleft()
+        if self.fail_wait:
+            raise RuntimeError(f"cluster {self.cid} wait died")
+        self.log.append(("wait", self.cid, desc.request_id))
+        fg = np.zeros((mb.DESC_WIDTH,), np.int32)
+        fg[mb.W_STATUS] = mb.THREAD_FINISHED
+        fg[mb.W_REQID] = desc.request_id
+        return np.float32([desc.request_id]), fg
+
+    def dispose(self):
+        self._q.clear()
+
+
+def make_rt():
+    def work(state, desc):
+        state = dict(state)
+        state["x"] = state["x"] + 1.0
+        return state, desc[mb.W_REQID][None]
+
+    rt = PersistentRuntime([("w", work)],
+                           result_template=jnp.zeros((1,), jnp.int32))
+    rt.boot({"x": jnp.zeros((4,), jnp.float32)})
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# basic future semantics
+# ---------------------------------------------------------------------------
+
+def test_submit_returns_ticket_resolved_at_retirement():
+    disp = Dispatcher({0: make_rt()})
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=7),
+                    admission=False)
+    assert isinstance(t, Ticket)
+    assert not t.done() and t.completion is None and t.cluster == 0
+    assert int(t.result()[0]) == 7                 # drives the dispatcher
+    assert t.done() and t.completion.request_id == 7
+    assert t.completion.met_deadline
+    # result() is idempotent once resolved
+    assert int(t.result()[0]) == 7
+    for rt in disp.runtimes.values():
+        rt.dispose()
+
+
+def test_result_with_zero_timeout_only_checks():
+    log = []
+    disp = Dispatcher({0: FakeRuntime(0, log, max_inflight=1)})
+    ts = [disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
+                      admission=False) for i in range(3)]
+    with pytest.raises(TimeoutError):
+        ts[2].result(timeout=0)                    # no driving allowed
+    disp.drain()
+    assert ts[2].result(timeout=0) is not None     # already resolved
+
+
+def test_wait_returns_completion_record():
+    disp = Dispatcher({0: FakeRuntime(0, [])})
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=3),
+                    admission=False)
+    comp = t.wait()
+    assert comp is t.completion
+    assert comp.request_id == 3 and comp.cluster == 0
+
+
+# ---------------------------------------------------------------------------
+# cancellation
+# ---------------------------------------------------------------------------
+
+def test_cancel_while_queued():
+    log = []
+    disp = Dispatcher({0: FakeRuntime(0, log, max_inflight=1)})
+    a = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1),
+                    admission=False)
+    b = disp.submit(mb.WorkDescriptor(opcode=0, request_id=2),
+                    admission=False)
+    disp.kick(0)                                   # a enters flight
+    assert not a.cancel()                          # in-flight: too late
+    assert b.cancel()                              # still queued: withdrawn
+    assert b.cancelled() and not b.done()
+    done = disp.drain()
+    assert [c.request_id for c in done] == [1]
+    assert ("trigger", 0, 2) not in log            # b never triggered
+    with pytest.raises(TicketCancelled):
+        b.result()
+    s = disp.deadline_stats()
+    assert s["n"] == 1 and s["cancelled"] == 1
+
+
+def test_cancel_is_idempotent():
+    disp = Dispatcher({0: FakeRuntime(0, [], max_inflight=1)})
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), admission=False)
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=2),
+                    admission=False)
+    disp.kick(0)
+    assert t.cancel()
+    assert not t.cancel()                          # second call: no-op
+    assert disp.cancelled_total == 1
+    disp.drain()
+
+
+def test_cancelled_items_do_not_skew_admission_or_placement():
+    """Cancellation removes the queued item eagerly: phantom entries must
+    not count toward worst-case admission load or least-loaded routing."""
+    from repro.core.dispatcher import AdmissionError, now_us
+
+    disp = Dispatcher({0: FakeRuntime(0, []), 1: FakeRuntime(1, [])},
+                      wcet_us={0: 1000.0})
+    base = now_us()
+    doomed = [disp.submit(mb.WorkDescriptor(opcode=0, request_id=i,
+                                            deadline_us=base + 10**9),
+                          cluster=0) for i in range(50)]
+    for t in doomed:
+        assert t.cancel()
+    assert disp.queue_depth(0) == 0          # live view excludes tombstones
+    # placement: with the phantoms gone the least-loaded tie-break picks
+    # cluster 0 again (50 phantom entries would have forced cluster 1)
+    t2 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=101),
+                     admission=False)
+    assert t2.cluster == 0
+    # admission: 50 phantom WCETs (50ms worst-case load) would have made
+    # a 5ms deadline unattainable
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=99,
+                                      deadline_us=now_us() + 5_000),
+                    cluster=0)
+    assert not t.cancelled()
+    assert disp.rejected == 0
+    disp.drain()
+
+
+def test_cancel_after_resolution_is_noop():
+    disp = Dispatcher({0: FakeRuntime(0, [])})
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1),
+                    admission=False)
+    disp.drain()
+    assert not t.cancel()
+    assert t.done() and not t.cancelled()
+
+
+def test_cancelled_item_skipped_by_failure_replay():
+    """A cancelled-but-still-queued item on a dying cluster must not be
+    replayed onto the survivor."""
+    log = []
+    disp = Dispatcher({0: FakeRuntime(0, log, max_inflight=1,
+                                      fail_wait=True),
+                       1: FakeRuntime(1, log)})
+    a = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), cluster=0,
+                    admission=False)
+    b = disp.submit(mb.WorkDescriptor(opcode=0, request_id=2), cluster=0,
+                    admission=False)
+    disp.kick(0)                                   # a in flight on 0
+    assert b.cancel()
+    done = disp.drain()                            # 0 dies; a replays on 1
+    assert [c.request_id for c in done] == [1]
+    assert a.done() and a.completion.cluster == 1 and a.cluster == 1
+    assert ("trigger", 1, 2) not in log
+
+
+# ---------------------------------------------------------------------------
+# out-of-order completion across clusters
+# ---------------------------------------------------------------------------
+
+def test_out_of_order_completion_across_clusters():
+    """A ticket on a fast cluster resolves while an earlier submission on
+    a gated cluster is still in flight."""
+    log = []
+    slow = FakeRuntime(0, log, gated=True)
+    fast = FakeRuntime(1, log)
+    disp = Dispatcher({0: slow, 1: fast})
+    a = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), cluster=0,
+                    admission=False)
+    b = disp.submit(mb.WorkDescriptor(opcode=0, request_id=2), cluster=1,
+                    admission=False)
+    comp_b = disp.wait_for(b)                      # resolves b first
+    assert b.done() and not a.done()
+    assert comp_b.request_id == 2
+    slow.gate_open = True
+    assert int(a.result()[0]) == 1
+    # completion order (b, a) inverted submission order (a, b)
+    waits = [e for e in log if e[0] == "wait"]
+    assert [w[2] for w in waits] == [2, 1]
+
+
+# ---------------------------------------------------------------------------
+# callbacks
+# ---------------------------------------------------------------------------
+
+def test_on_complete_callback_fires_at_resolution():
+    disp = Dispatcher({0: FakeRuntime(0, [])})
+    seen = []
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=5),
+                    admission=False)
+    t.on_complete(lambda comp: seen.append(comp.request_id))
+    disp.drain()
+    assert seen == [5]
+    # registering after resolution fires immediately
+    t.on_complete(lambda comp: seen.append(-comp.request_id))
+    assert seen == [5, -5]
+
+
+def test_raising_callback_does_not_lose_work():
+    """A callback that raises must neither break the drain loop nor drop
+    other tickets; EVERY callback error is kept on the ticket."""
+    disp = Dispatcher({0: FakeRuntime(0, [], max_inflight=1)})
+    boom = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1),
+                       admission=False)
+    rest = [disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
+                        admission=False) for i in (2, 3)]
+    boom.on_complete(lambda comp: (_ for _ in ()).throw(
+        ValueError("first subscriber blew up")))
+    boom.on_complete(lambda comp: (_ for _ in ()).throw(
+        RuntimeError("second subscriber blew up")))
+    done = disp.drain()
+    assert [c.request_id for c in done] == [1, 2, 3]
+    assert boom.done()
+    assert [type(e) for e in boom.callback_errors] == [ValueError,
+                                                       RuntimeError]
+    assert isinstance(boom.callback_error, ValueError)   # first error
+    assert all(t.done() and t.callback_error is None for t in rest)
+
+
+# ---------------------------------------------------------------------------
+# failure replay keeps tickets attached
+# ---------------------------------------------------------------------------
+
+def test_replay_preserves_tickets_inflight_and_queued():
+    log = []
+    disp = Dispatcher({0: FakeRuntime(0, log, max_inflight=2,
+                                      fail_wait=True),
+                       1: FakeRuntime(1, log)})
+    tickets = [disp.submit(mb.WorkDescriptor(opcode=0, request_id=r),
+                           cluster=0, admission=False) for r in (1, 2, 3)]
+    done = disp.drain()                 # 2 in flight + 1 queued all replay
+    assert sorted(c.request_id for c in done) == [1, 2, 3]
+    for t in tickets:
+        assert t.done() and t.completion.cluster == 1 and t.cluster == 1
+
+
+def test_trigger_failure_replay_preserves_ticket():
+    """The item whose very trigger kills the cluster keeps its ticket
+    through the mailbox-record replay."""
+    rt_bad = make_rt()
+    rt_bad.dispose()                    # triggering will now fail
+    disp = Dispatcher({0: rt_bad, 1: make_rt()})
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=9), cluster=0,
+                    admission=False)
+    done = disp.drain()
+    assert [c.request_id for c in done] == [9]
+    assert t.done() and t.completion.cluster == 1
+    for rt in disp.runtimes.values():
+        rt.dispose()
+
+
+def test_failed_cluster_clears_draining_for_reused_id():
+    """A quiesced cluster that dies must not leave its id in the draining
+    set: replacement capacity registered under the same id gets traffic."""
+    log = []
+    disp = Dispatcher({0: FakeRuntime(0, log, fail_wait=True),
+                       1: FakeRuntime(1, log)})
+    disp.quiesce(0)
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), cluster=0,
+                    admission=False)
+    disp.drain()                                   # 0 dies, 1 absorbs
+    assert t.done() and t.completion.cluster == 1
+    disp.register(0, FakeRuntime(0, log))          # reused id starts fresh
+    # pile load on 1 so least-loaded must pick the replacement
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=2), cluster=1,
+                admission=False)
+    t2 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=3),
+                     admission=False)
+    assert t2.cluster == 0
+    disp.drain()
+
+
+def test_wait_for_on_idle_dispatcher_raises():
+    disp = Dispatcher({0: FakeRuntime(0, [])})
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1),
+                    admission=False)
+    disp.drain()
+    other = Dispatcher({0: FakeRuntime(0, [])})
+    foreign = other.submit(mb.WorkDescriptor(opcode=0, request_id=2),
+                           admission=False)
+    with pytest.raises(RuntimeError, match="cannot resolve"):
+        disp.wait_for(foreign)          # never queued on THIS dispatcher
