@@ -29,10 +29,10 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n
 
 
-def run() -> list[str]:
+def run(smoke: bool = False) -> list[str]:
     rows = []
     rng = np.random.default_rng(0)
-    B, S, Hq, Hkv, D = 1, 1024, 4, 2, 64
+    B, S, Hq, Hkv, D = 1, 256 if smoke else 1024, 4, 2, 64
     q = jnp.asarray(rng.normal(size=(B, S, Hq, D)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)), jnp.float32)

@@ -16,8 +16,11 @@ from repro.serving import ServingEngine
 from repro.training import init_state, make_train_step, opt_config_for
 
 
-def run() -> list[str]:
+def run(smoke: bool = False) -> list[str]:
     rows = []
+    n_train = 2 if smoke else 10
+    n_requests = 2 if smoke else 8
+    n_new = 4 if smoke else 32
     cfg = get_config("llama3-8b").reduced()
 
     # --- training throughput ---
@@ -31,7 +34,7 @@ def run() -> list[str]:
     params, opt, m = step(params, opt, batch)          # compile
     jax.block_until_ready(m)
     t0 = time.perf_counter()
-    n = 10
+    n = n_train
     for i in range(n):
         params, opt, m = step(params, opt, batch)
     jax.block_until_ready(m)
@@ -44,10 +47,10 @@ def run() -> list[str]:
     p2 = model2.init(jax.random.key(0))
     eng = ServingEngine(model2, p2, max_batch=8, max_seq=96)
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, 8) for _ in range(8)]
+    prompts = [rng.integers(0, cfg.vocab_size, 8) for _ in range(n_requests)]
     eng.generate(prompts[:1], max_new_tokens=2)        # warm
     t0 = time.perf_counter()
-    outs = eng.generate(prompts, max_new_tokens=32)
+    outs = eng.generate(prompts, max_new_tokens=n_new)
     dt = time.perf_counter() - t0
     toks = sum(len(o) for o in outs)
     st = eng.tracker.stats["trigger"]

@@ -1,22 +1,31 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV and
-# writes the same rows as machine-readable JSON (default BENCH_2.json, or
-# the path given as argv[1]) so the perf trajectory is tracked across PRs.
+# writes the same rows as machine-readable JSON (default BENCH_3.json, or
+# the path given positionally) so the perf trajectory is tracked across PRs.
 #
 #   bench_dispatch    -> paper Tables II (avg) & III (worst): LK vs
 #                        traditional phase costs, single-cluster & full,
-#                        plus the pipelined-drain and ticket-result arms
+#                        the pipelined-drain and ticket-result arms, and
+#                        the edf/fp/server scheduling-policy comparison
 #   bench_throughput  -> train/serve throughput of the persistent stack
 #   bench_kernels     -> flash-vs-masked attention, executor dispatch rate
+#
+# ``--smoke`` is the CI fast path: every module runs with reduced reps so
+# bench code cannot silently rot, and NO JSON artifact is written.
 #
 # Roofline terms come from the dry-run (python -m repro.launch.roofline),
 # not from wall time — this container is CPU-only.
 from __future__ import annotations
 
+import argparse
 import json
+import pathlib
 import sys
 import traceback
 
-DEFAULT_JSON = "BENCH_2.json"
+# repo root on sys.path so ``python benchmarks/run.py`` works from anywhere
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+DEFAULT_JSON = "BENCH_3.json"
 
 
 def _row_record(row: str) -> dict:
@@ -33,25 +42,37 @@ def _row_record(row: str) -> dict:
 
 
 def main(argv=None) -> None:
-    argv = sys.argv[1:] if argv is None else argv
-    json_path = argv[0] if argv else DEFAULT_JSON
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path", nargs="?", default=DEFAULT_JSON)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI path: reduced reps, no JSON written")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
     from benchmarks import bench_dispatch, bench_kernels, bench_throughput
     print("name,us_per_call,derived")
     records = []
+    failures = 0
     for mod in (bench_dispatch, bench_throughput, bench_kernels):
         try:
-            for row in mod.run():
+            for row in mod.run(smoke=args.smoke):
                 print(row, flush=True)
                 records.append(_row_record(row))
         except Exception as e:  # pragma: no cover — keep the harness going
             traceback.print_exc()
+            failures += 1
             row = f"{mod.__name__},ERROR,{type(e).__name__}"
             print(row, flush=True)
             records.append(_row_record(row))
-    with open(json_path, "w") as f:
+    if args.smoke:
+        print(f"# smoke: {len(records)} rows, no JSON written",
+              file=sys.stderr)
+        if failures:   # CI signal: bench code rotted
+            sys.exit(1)
+        return
+    with open(args.json_path, "w") as f:
         json.dump(records, f, indent=2)
         f.write("\n")
-    print(f"# wrote {len(records)} rows to {json_path}", file=sys.stderr)
+    print(f"# wrote {len(records)} rows to {args.json_path}",
+          file=sys.stderr)
 
 
 if __name__ == "__main__":

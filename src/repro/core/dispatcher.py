@@ -1,12 +1,24 @@
-"""Host-side dispatcher: per-cluster EDF queues, deadline admission control,
-straggler detection, failure handling — over a pipelined trigger/wait split.
+"""Host-side dispatcher: pluggable per-cluster scheduling, analytic
+admission control, straggler detection, failure handling — over a
+pipelined trigger/wait split.
 
 Real-time semantics follow the paper's design goals (§II-A): worst-case
 driven admission (WCET estimates, not averages), spatial pinning of work
 classes to clusters, and accounting of the avg↔worst gap.
 
+Every scheduling DECISION lives in a :class:`repro.core.sched.SchedPolicy`
+(EDF by default; fixed-priority and budgeted-server ship too — see
+``repro/core/sched/``): the policy owns the per-cluster queues, the
+trigger order, the admission analysis, and budget accounting. The
+dispatcher owns the MECHANISM: mailboxes, pipeline capacity, tickets,
+WCET observation, straggler flagging, and failure replay. Criticality
+shedding bridges the two: when a HIGH-criticality submission fails
+admission, queued LOW-criticality work is cancelled (through the normal
+ticket ``cancel()`` path, after a dry-run proves it suffices) to make
+room.
+
 Dispatch is asynchronous end to end: ``drain()`` runs an event loop that
-triggers the earliest-deadline item on EVERY cluster with pipeline capacity
+triggers the next eligible item on EVERY cluster with pipeline capacity
 before waiting on any completion (trigger-all → ``wait_any`` → refill), so
 the host keeps feeding mailboxes while devices run. WCET observation,
 straggler flagging, and failure replay all happen at completion-retirement
@@ -23,25 +35,32 @@ running counters.
 """
 from __future__ import annotations
 
-import heapq
 import itertools
 import time
+import warnings
 from collections import deque
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core import mailbox as mb
+from repro.core.mailbox import NO_DEADLINE
 from repro.core.persistent import PersistentRuntime
+from repro.core.sched import (
+    AdmissionError, ClassSpec, QueueItem, SchedPolicy, crit_rank,
+    make_policy,
+)
+from repro.core.sched import admission as sched_admission
+
+__all__ = [
+    "AdmissionError", "AllClustersFailed", "Completion", "Dispatcher",
+    "NO_DEADLINE", "Ticket", "TicketCancelled", "now_us",
+]
 
 
 def now_us() -> int:
     return time.perf_counter_ns() // 1000
-
-
-class AdmissionError(RuntimeError):
-    pass
 
 
 class AllClustersFailed(RuntimeError):
@@ -75,7 +94,10 @@ class Ticket:
     Resolved by the dispatcher inside ``_retire()`` when the item's step is
     retired from the pipeline. ``cluster`` tracks the item's CURRENT
     placement — it is rewritten when a failed cluster's work replays onto a
-    survivor.
+    survivor. ``priority`` is the static priority the scheduling policy
+    resolved for this item's class (smaller = more urgent); ``server`` is
+    the name of the bandwidth server the item is charged to, or None for
+    unbudgeted classes.
 
     ``result(timeout)`` DRIVES the dispatcher (kick + wait_any) from the
     calling thread until this ticket resolves; the dispatcher is a
@@ -88,6 +110,7 @@ class Ticket:
     """
 
     __slots__ = ("_dispatcher", "desc", "request_id", "cluster",
+                 "priority", "server",
                  "_completion", "_cancelled", "_triggered", "_callbacks",
                  "callback_errors")
 
@@ -97,6 +120,8 @@ class Ticket:
         self.desc = desc
         self.request_id = desc.request_id
         self.cluster = cluster
+        self.priority: Optional[int] = None
+        self.server: Optional[str] = None
         self._completion: Optional[Completion] = None
         self._cancelled = False
         self._triggered = False
@@ -130,7 +155,7 @@ class Ticket:
         self._cancelled = True
         self._dispatcher.cancelled_total += 1
         # the queued item becomes a tombstone, discarded lazily at pop
-        # time; the per-cluster counter keeps load/admission exact in O(1)
+        # time; the policy's counter keeps load/admission exact in O(1)
         self._dispatcher._note_cancelled(self)
         return True
 
@@ -165,13 +190,8 @@ class Ticket:
         self._callbacks.clear()
 
 
-@dataclass(order=True)
-class _Item:
-    deadline_us: int
-    seq: int
-    desc: mb.WorkDescriptor = field(compare=False)
-    submitted_us: int = field(compare=False, default=0)
-    ticket: Optional[Ticket] = field(compare=False, default=None)
+# Back-compat alias: the queue item now lives with the policies.
+_Item = QueueItem
 
 
 @dataclass
@@ -186,20 +206,25 @@ class Completion:
 
 
 class Dispatcher:
-    """EDF dispatcher over persistent per-cluster runtimes."""
+    """Policy-driven dispatcher over persistent per-cluster runtimes."""
 
     def __init__(self, runtimes: dict[int, PersistentRuntime],
                  wcet_us: Optional[dict[int, float]] = None,
                  straggler_factor: float = 4.0,
                  on_failure: Optional[Callable[[int], None]] = None,
-                 completion_window: int = 1024):
+                 completion_window: int = 1024,
+                 policy: Union[str, SchedPolicy, None] = None,
+                 classes: Sequence[ClassSpec] = (),
+                 default_wcet_us: float = 1000.0,
+                 wcet_sigma: float = 1.0,
+                 clock: Optional[Callable[[], int]] = None):
         for rt in runtimes.values():
             _require_runtime(rt)
         self.runtimes = dict(runtimes)
-        self.queues: dict[int, list[_Item]] = {c: [] for c in runtimes}
-        # cancelled-but-still-enqueued tombstones per cluster (lazy heap
-        # deletion): subtracted from every live-depth/load computation
-        self._dead: dict[int, int] = {c: 0 for c in runtimes}
+        # ALL queueing/admission decisions live in the policy
+        self.policy: SchedPolicy = make_policy(policy, classes)
+        for c in self.runtimes:
+            self.policy.add_cluster(c)
         self.mailbox = mb.Mailbox(max(runtimes) + 1 if runtimes else 0)
         # FIFO of (item, trigger_us) per cluster — mirrors mailbox.pending
         self._inflight: dict[int, deque] = {c: deque() for c in runtimes}
@@ -211,8 +236,18 @@ class Dispatcher:
         # WCET estimate per opcode (µs) — seeded by caller, refined online
         self.wcet_us = dict(wcet_us or {})
         self._observed: dict[int, list[float]] = {}
+        # unknown-opcode fallback: explicit knob, warned once per opcode
+        # (a silent magic constant is how admission lies to you)
+        self.default_wcet_us = float(default_wcet_us)
+        self.wcet_sigma = float(wcet_sigma)
+        # inflated estimate per opcode, invalidated when a retirement
+        # adds an observation — admission sums estimates over whole
+        # queues, so recomputing the window statistic per item is O(n·w)
+        self._estimate_cache: dict[int, float] = {}
+        self._default_warned: set[int] = set()
         self.straggler_factor = straggler_factor
         self.on_failure = on_failure
+        self._clock = clock if clock is not None else now_us
         # rolling debug windows — memory stays O(completion_window) no
         # matter how many requests the dispatcher serves
         if completion_window < 1:
@@ -224,6 +259,7 @@ class Dispatcher:
         # exact running counters behind deadline_stats()
         self.rejected = 0
         self.cancelled_total = 0
+        self.shed_total = 0
         self._n_completed = 0
         self._n_met = 0
         self._n_stragglers = 0
@@ -240,14 +276,24 @@ class Dispatcher:
         self.failure_callback_errors: list[BaseException] = []
 
     # ------------------------------------------------------------------
+    @property
+    def queues(self) -> dict[int, list[QueueItem]]:
+        """Per-cluster snapshots of live queued items (compat view; the
+        authoritative queues live inside ``self.policy``)."""
+        return {c: self.policy.live_items(c) for c in self.runtimes}
+
+    def set_class(self, spec: ClassSpec) -> None:
+        """Declare one opcode's scheduling parameters (priority, budget,
+        criticality) to the active policy."""
+        self.policy.set_class(spec)
+
     def register(self, cluster: int, runtime: PersistentRuntime) -> None:
         """Attach a runtime as a new cluster (shared-dispatcher clients)."""
         if cluster in self.runtimes:
             raise KeyError(f"cluster {cluster} already registered")
         _require_runtime(runtime)
         self.runtimes[cluster] = runtime
-        self.queues[cluster] = []
-        self._dead[cluster] = 0
+        self.policy.add_cluster(cluster)
         self._inflight[cluster] = deque()
         self._draining.discard(cluster)       # a reused id starts fresh
         self.mailbox.grow(cluster + 1)
@@ -261,9 +307,8 @@ class Dispatcher:
             raise RuntimeError(
                 f"cluster {cluster} still has queued/in-flight work")
         del self.runtimes[cluster]
-        del self.queues[cluster]      # cancelled tombstones go with it
+        self.policy.drop_cluster(cluster)   # tombstones go with it
         del self._inflight[cluster]
-        self._dead.pop(cluster, None)
         self._last_retire_us.pop(cluster, None)
         self._draining.discard(cluster)
         self.mailbox.clear(cluster)
@@ -286,21 +331,38 @@ class Dispatcher:
     def _placement_pool(self) -> list[int]:
         """Clusters eligible for auto-placement/replay; falls back to all
         registered clusters when everything is draining."""
-        pool = [c for c in self.queues if c not in self._draining]
-        return pool or list(self.queues)
+        pool = [c for c in self.runtimes if c not in self._draining]
+        return pool or list(self.runtimes)
 
     def _note_cancelled(self, ticket: Ticket) -> None:
-        """Count a cancelled-but-still-enqueued tombstone so queue_depth,
-        least-loaded placement, and admission exclude it without paying a
-        heap rebuild per cancellation (mass-cancel storms stay O(1) each;
-        the item itself is discarded when it reaches the heap top)."""
-        if ticket.cluster in self._dead:
-            self._dead[ticket.cluster] += 1
+        """Forward a cancelled-but-still-enqueued tombstone to the policy
+        so queue_depth, least-loaded placement, and admission exclude it
+        without paying a heap rebuild per cancellation (mass-cancel storms
+        stay O(1) each; the item itself is discarded when it surfaces)."""
+        if ticket.cluster in self.runtimes:
+            self.policy.note_cancelled(ticket.cluster, ticket)
 
     def _estimate_us(self, opcode: int) -> float:
-        if opcode in self._observed and self._observed[opcode]:
-            return float(np.max(self._observed[opcode]))   # observed worst
-        return float(self.wcet_us.get(opcode, 1000.0))
+        """Worst-case service estimate: observed worst inflated by
+        ``wcet_sigma`` standard deviations of observed jitter; falls back
+        to the seeded value, then to ``default_wcet_us`` (warned once)."""
+        obs = self._observed.get(opcode)
+        if obs:
+            cached = self._estimate_cache.get(opcode)
+            if cached is None:
+                cached = sched_admission.inflated_wcet(obs, self.wcet_sigma)
+                self._estimate_cache[opcode] = cached
+            return cached
+        if opcode in self.wcet_us:
+            return float(self.wcet_us[opcode])
+        if opcode not in self._default_warned:
+            self._default_warned.add(opcode)
+            warnings.warn(
+                f"no WCET estimate for opcode {opcode}: admission falls "
+                f"back to default_wcet_us={self.default_wcet_us:.0f}µs — "
+                "seed wcet_us or let the dispatcher observe this class",
+                RuntimeWarning, stacklevel=3)
+        return self.default_wcet_us
 
     def _load(self, cluster: int) -> int:
         return self.queue_depth(cluster) + len(self._inflight[cluster])
@@ -310,20 +372,20 @@ class Dispatcher:
 
     def queue_depth(self, cluster: int) -> int:
         """LIVE queued items (cancelled tombstones excluded)."""
-        return max(0, len(self.queues.get(cluster, ()))
-                   - self._dead.get(cluster, 0))
+        return self.policy.depth(cluster)
 
     @property
     def busy(self) -> bool:
-        return any(self.queues.values()) or any(self._inflight.values())
+        return any(self.policy.has_queued(c) for c in self.runtimes) \
+            or any(self._inflight.values())
 
     # ------------------------------------------------------------------
     def submit(self, desc: mb.WorkDescriptor, cluster: Optional[int] = None,
                request_class: Optional[str] = None,
                admission: bool = True) -> Ticket:
-        """EDF-enqueue; returns a Ticket future resolved at retirement.
+        """Policy-enqueue; returns a Ticket future resolved at retirement.
         Raises AdmissionError when the deadline cannot be met under
-        worst-case estimates."""
+        worst-case estimates AND criticality shedding cannot make room."""
         if cluster is None and request_class is not None:
             cluster = self._pins.get(request_class)
         if cluster is None:
@@ -332,69 +394,120 @@ class Dispatcher:
             raise KeyError(cluster)
 
         if admission and desc.deadline_us:
-            load_us = self._estimate_us(desc.opcode)
-            # in-flight work occupies the cluster regardless of deadline
-            for it, _ in self._inflight[cluster]:
-                load_us += self._estimate_us(it.desc.opcode)
-            for it in self.queues[cluster]:
-                if it.ticket is not None and it.ticket.cancelled():
-                    continue                   # tombstone: no load
-                if it.deadline_us <= desc.deadline_us:
-                    load_us += self._estimate_us(it.desc.opcode)
-            if now_us() + load_us > desc.deadline_us:
-                self.rejected += 1
-                raise AdmissionError(
-                    f"deadline {desc.deadline_us} unattainable "
-                    f"(worst-case load {load_us:.0f}µs)")
+            try:
+                self._admit(cluster, desc)
+            except AdmissionError:
+                if not self._shed_to_admit(cluster, desc):
+                    self.rejected += 1
+                    raise
         ticket = Ticket(self, desc, cluster)
-        item = _Item(deadline_us=desc.deadline_us or 2**62,
-                     seq=next(self._seq), desc=desc, submitted_us=now_us(),
-                     ticket=ticket)
-        heapq.heappush(self.queues[cluster], item)
+        spec = self.policy.spec(desc.opcode)
+        ticket.priority = self.policy.priority_of(desc.opcode)
+        ticket.server = spec.name if spec is not None \
+            and spec.budget_us is not None else None
+        item = QueueItem(deadline_us=desc.effective_deadline_us,
+                         seq=next(self._seq), desc=desc,
+                         submitted_us=self._clock(), ticket=ticket)
+        self.policy.enqueue(cluster, item)
         return ticket
+
+    def _admit(self, cluster: int, desc: mb.WorkDescriptor,
+               ignore: Sequence[QueueItem] = ()) -> None:
+        self.policy.admit(
+            cluster, desc, estimate=self._estimate_us,
+            inflight=[it.desc for it, _ in self._inflight[cluster]],
+            now_us=self._clock(), ignore=ignore)
+
+    def _shed_to_admit(self, cluster: int, desc: mb.WorkDescriptor) -> bool:
+        """Overload shedding: try to admit a HIGHER-criticality item by
+        cancelling queued LOWER-criticality work on the same cluster.
+        Dry-runs admission with candidates ignored (lowest criticality,
+        latest deadline first) and only cancels — through the normal
+        ticket ``cancel()`` path — once a sufficient prefix is found, so a
+        hopeless admission never destroys queued work. Deadline-free
+        items are never victims: they contribute nothing to any
+        deadline's demand term, and callers blocking on them (e.g. a
+        serving engine's insert handoff) must not lose work to a tenant's
+        deadline."""
+        my_rank = crit_rank(self.policy.criticality_of(desc.opcode))
+        cands = [it for it in self.policy.live_items(cluster)
+                 if it.ticket is not None and not it.ticket._triggered
+                 and it.deadline_us != NO_DEADLINE
+                 and crit_rank(self.policy.criticality_of(it.desc.opcode))
+                 < my_rank]
+        if not cands:
+            return False
+        cands.sort(key=lambda it: (
+            crit_rank(self.policy.criticality_of(it.desc.opcode)),
+            -it.deadline_us))
+        shed: list[QueueItem] = []
+        for it in cands:
+            shed.append(it)
+            try:
+                self._admit(cluster, desc, ignore=shed)
+            except AdmissionError:
+                continue
+            # prune victims the admission doesn't actually need (e.g. a
+            # far-deadline item outside the failing demand window) — only
+            # work whose cancellation changes the verdict may be destroyed
+            for victim in list(shed):
+                trial = [v for v in shed if v is not victim]
+                try:
+                    self._admit(cluster, desc, ignore=trial)
+                except AdmissionError:
+                    continue
+                shed = trial
+            for victim in shed:       # dry run passed: cancel for real
+                victim.ticket.cancel()
+            self.shed_total += len(shed)
+            return True
+        return False
 
     # ------------------------------------------------------------------
     # pipeline internals: trigger / retire / fail
     # ------------------------------------------------------------------
     def _trigger_next(self, cluster: int) -> bool:
-        """Trigger the earliest-deadline queued item if the cluster has
-        pipeline capacity; cancelled items are discarded on pop (lazy
-        heap deletion). Returns True when a trigger happened. On trigger
-        failure the cluster is retired and its work replayed (re-raises)."""
-        q = self.queues[cluster]
+        """Trigger the policy's next eligible item if the cluster has
+        pipeline capacity. Returns True when a trigger happened (False
+        when the queue is empty, the pipeline is full, or everything
+        queued is budget-deferred). On trigger failure the cluster is
+        retired and its work replayed (re-raises)."""
         rt = self.runtimes[cluster]
-        while q:
-            if len(self._inflight[cluster]) >= rt.max_inflight:
-                return False
-            item = heapq.heappop(q)
-            t = item.ticket
-            if t is not None and t.cancelled():
-                if self._dead.get(cluster, 0) > 0:
-                    self._dead[cluster] -= 1
-                continue
-            if t is not None:
-                t._triggered = True
-            self.mailbox.post(cluster, item.desc.encode())
-            try:
-                rt.trigger(item.desc)
-            except Exception:
-                # the descriptor is already in the mailbox record: append
-                # the item so the replay keeps its ticket attached
-                self._inflight[cluster].append((item, now_us()))
-                self._fail_cluster(cluster)
-                raise
-            self._inflight[cluster].append((item, now_us()))
-            assert self.mailbox.depth(cluster) == \
-                len(self._inflight[cluster]), \
-                "mailbox / dispatcher in-flight records desynced"
-            return True
-        return False
+        if not self.policy.has_queued(cluster):
+            return False
+        if len(self._inflight[cluster]) >= rt.max_inflight:
+            return False
+        item = self.policy.pop_next(cluster, self._clock())
+        if item is None:
+            return False              # deferred: budget exhausted
+        t = item.ticket
+        if t is not None:
+            t._triggered = True
+        self.mailbox.post(cluster, item.desc.encode())
+        # stamp BEFORE the trigger call: on synchronous backends the
+        # compute runs inside trigger(), and the stamp is what service /
+        # budget accounting measures cluster occupancy from — stamping
+        # after would hide that work from WCET and bandwidth servers
+        t_trig = self._clock()
+        try:
+            rt.trigger(item.desc)
+        except Exception:
+            # the descriptor is already in the mailbox record: append
+            # the item so the replay keeps its ticket attached
+            self._inflight[cluster].append((item, t_trig))
+            self._fail_cluster(cluster)
+            raise
+        self._inflight[cluster].append((item, t_trig))
+        assert self.mailbox.depth(cluster) == \
+            len(self._inflight[cluster]), \
+            "mailbox / dispatcher in-flight records desynced"
+        return True
 
     def _retire(self, cluster: int) -> Completion:
         """Block on the cluster's OLDEST in-flight step; observe WCET,
-        flag stragglers, ack the mailbox, resolve the ticket. On wait
-        failure the cluster is retired and queued + in-flight work
-        replayed (re-raises)."""
+        flag stragglers, ack the mailbox, charge the policy, resolve the
+        ticket. On wait failure the cluster is retired and queued +
+        in-flight work replayed (re-raises)."""
         assert self.mailbox.depth(cluster) == len(self._inflight[cluster]), \
             "mailbox / dispatcher in-flight records desynced"
         item, t0 = self._inflight[cluster][0]
@@ -407,17 +520,19 @@ class Dispatcher:
         self._inflight[cluster].popleft()
         self.mailbox.ack(cluster, mb.THREAD_FINISHED, item.desc.request_id)
         start = max(t0, self._last_retire_us.get(cluster, 0))
-        end = now_us()
+        end = self._clock()
         self._last_retire_us[cluster] = end
         service = end - start
         obs = self._observed.setdefault(item.desc.opcode, [])
         obs.append(service)
         if len(obs) > 256:
             del obs[0]
+        self._estimate_cache.pop(item.desc.opcode, None)
         avg = float(np.mean(obs))
         if len(obs) >= 8 and service > self.straggler_factor * avg:
             self.stragglers.append((cluster, item.desc.request_id, service))
             self._n_stragglers += 1
+        self.policy.on_retire(cluster, item, service, end)
         comp = Completion(
             request_id=item.desc.request_id, cluster=cluster, result=result,
             queued_us=start - item.submitted_us, service_us=service,
@@ -444,9 +559,8 @@ class Dispatcher:
         the replay landed, so no work is lost either way."""
         inflight_descs = self.mailbox.pending(cluster)
         inflight_meta = list(self._inflight.pop(cluster, ()))
-        queued = self.queues.pop(cluster, [])
+        queued = self.policy.drop_cluster(cluster)
         del self.runtimes[cluster]
-        self._dead.pop(cluster, None)
         self._last_retire_us.pop(cluster, None)
         self._draining.discard(cluster)
         self.mailbox.clear(cluster)
@@ -457,24 +571,24 @@ class Dispatcher:
             except Exception as e:
                 cb_exc = e
                 self.failure_callback_errors.append(e)
-        if not self.queues:
+        if not self.runtimes:
             raise AllClustersFailed("all clusters failed") from cb_exc
         replay = []
         for i, desc in enumerate(inflight_descs):
             meta = inflight_meta[i][0] if i < len(inflight_meta) else None
-            sub = meta.submitted_us if meta is not None else now_us()
+            sub = meta.submitted_us if meta is not None else self._clock()
             ticket = meta.ticket if meta is not None else None
             if ticket is not None:
                 ticket._triggered = False       # queued again → cancellable
-            replay.append(_Item(deadline_us=desc.deadline_us or 2**62,
-                                seq=next(self._seq), desc=desc,
-                                submitted_us=sub, ticket=ticket))
+            replay.append(QueueItem(deadline_us=desc.effective_deadline_us,
+                                    seq=next(self._seq), desc=desc,
+                                    submitted_us=sub, ticket=ticket))
         replay.extend(queued)
         for it in replay:
             if it.ticket is not None and it.ticket.cancelled():
                 continue
             tgt = min(self._placement_pool(), key=self._load)
-            heapq.heappush(self.queues[tgt], it)
+            self.policy.enqueue(tgt, it)
             if it.ticket is not None:
                 it.ticket.cluster = tgt
         if cb_exc is not None:
@@ -515,6 +629,25 @@ class Dispatcher:
         _, c = min(cands)
         return self._retire(c)
 
+    def _sleep_until_eligible(self) -> None:
+        """Nothing in flight and nothing triggerable, but queues hold
+        budget-DEFERRED work: sleep toward the earliest replenishment.
+        With an injected clock, real sleeping can never make the deferred
+        work eligible — raise instead of livelocking the pump."""
+        now = self._clock()
+        nxts = [t for c in list(self.runtimes)
+                for t in (self.policy.next_eligible_us(c, now),)
+                if t is not None]
+        if not nxts:
+            return
+        if self._clock is not now_us:
+            raise RuntimeError(
+                "budget-deferred work cannot progress: the injected clock "
+                f"never advances past {min(nxts)} inside the pump — "
+                "advance it between pumps, or use a work-conserving "
+                "server policy")
+        time.sleep(min(max((min(nxts) - now) / 1e6, 0.0), 0.005))
+
     def _pump_once(self) -> tuple[int, Optional[Completion]]:
         """One event-pump round: fill every cluster's pipeline, retire one
         completion. Cluster failures are absorbed (their work is already
@@ -534,6 +667,9 @@ class Dispatcher:
             raise
         except Exception:
             return progressed, None  # cluster retired; work replayed
+        if comp is None and not progressed \
+                and not any(self._inflight.values()):
+            self._sleep_until_eligible()
         return progressed, comp
 
     def wait_for(self, ticket: Ticket,
@@ -562,20 +698,23 @@ class Dispatcher:
                     "dispatcher is idle and the ticket is not queued")
 
     def pump(self, cluster: int) -> Optional[Completion]:
-        """Synchronous single step on `cluster`: trigger the earliest item
-        (if any), then retire its oldest in-flight step."""
+        """Synchronous single step on `cluster`: trigger the next eligible
+        item (if any), then retire its oldest in-flight step."""
         if cluster not in self.runtimes:
             raise KeyError(cluster)
-        self._trigger_next(cluster)
+        triggered = self._trigger_next(cluster)
         if self._inflight[cluster]:
             return self._retire(cluster)
+        if not triggered:
+            self._sleep_until_eligible()   # budget-deferred backlog
         return None
 
     def drain(self) -> list[Completion]:
         """Event loop until all queues and pipelines are empty: fill every
         cluster's pipeline, retire one completion, refill. Mid-flight
         cluster failures are absorbed — their work replays on survivors —
-        unless every cluster is gone."""
+        unless every cluster is gone. Budget-deferred work is waited out
+        (the pump sleeps toward the next replenishment)."""
         done = []
         while self.busy:
             _, comp = self._pump_once()
@@ -593,6 +732,8 @@ class Dispatcher:
             "met": self._n_met,
             "rejected": self.rejected,
             "cancelled": self.cancelled_total,
+            "shed": self.shed_total,
+            "policy": self.policy.name,
             "avg_service_us": (self._service_sum_us / self._n_completed
                                if self._n_completed else 0.0),
             "worst_service_us": self._service_worst_us,

@@ -37,6 +37,13 @@ DESC_WIDTH = 8
 # descriptor word indices
 W_STATUS, W_OPCODE, W_ARG0, W_ARG1, W_SEQLEN, W_REQID, W_DL_LO, W_DL_HI = range(8)
 
+# Effective deadline of deadline-free work. Descriptors encode "no deadline"
+# as deadline_us == 0 (the wire format's natural zero); every host-side
+# ordering comparison instead uses this named sentinel so deadline-free items
+# sort after ANY real deadline. Shared by the dispatcher, the sched policies,
+# and descriptor decoding — never compare against a bare 2**62 again.
+NO_DEADLINE = 2**62
+
 
 @dataclass(frozen=True)
 class WorkDescriptor:
@@ -47,6 +54,11 @@ class WorkDescriptor:
     seq_len: int = 0
     request_id: int = 0
     deadline_us: int = 0           # absolute deadline, microseconds
+
+    @property
+    def effective_deadline_us(self) -> int:
+        """The deadline as an ordering key: ``NO_DEADLINE`` when unset."""
+        return self.deadline_us or NO_DEADLINE
 
     def encode(self) -> np.ndarray:
         d = np.zeros(DESC_WIDTH, np.int32)

@@ -36,34 +36,54 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence, Union
 
 from repro.core import mailbox as mb
 from repro.core.clusters import Cluster, ClusterManager
 from repro.core.dispatcher import Dispatcher, Ticket
 from repro.core.persistent import PersistentRuntime, RuntimeProtocol
+from repro.core.sched import CRIT_LOW, ClassSpec, SchedPolicy
 
 
 @dataclass(frozen=True)
 class WorkClass:
     """Declarative registration of one kind of work.
 
-    name     — request-class name; also the opcode's row name in every
-               runtime's work table.
-    fn       — ``fn(state, desc) -> (state, result)``; compiled as one
-               branch of the shared ``lax.switch`` on every cluster (every
-               cluster can run every class — that is what makes failure
-               replay universal).
-    wcet_us  — seed worst-case execution time for deadline admission;
-               refined online from observed worsts.
-    pin      — manager-cluster index for spatial pinning (paper §II-A), or
-               None for least-loaded placement.
+    name        — request-class name; also the opcode's row name in every
+                  runtime's work table.
+    fn          — ``fn(state, desc) -> (state, result)``; compiled as one
+                  branch of the shared ``lax.switch`` on every cluster
+                  (every cluster can run every class — that is what makes
+                  failure replay universal).
+    wcet_us     — seed worst-case execution time for deadline admission;
+                  refined online from observed worsts.
+    pin         — manager-cluster index for spatial pinning (paper §II-A),
+                  or None for least-loaded placement.
+    priority    — static priority for the fixed-priority policy (smaller =
+                  more urgent; None derives rate-monotonic from period_us).
+    budget_us   — per-period execution budget for the budgeted-server
+                  policy (requires period_us); None = best effort.
+    period_us   — budget replenishment / rate-monotonic period.
+    criticality — overload-shedding level (``"low"``/``"high"``): on
+                  admission failure a HIGH submission may cancel queued
+                  LOW work to make room.
     """
 
     name: str
     fn: Callable[[Any, Any], tuple]
     wcet_us: Optional[float] = None
     pin: Optional[int] = None
+    priority: Optional[int] = None
+    budget_us: Optional[float] = None
+    period_us: Optional[float] = None
+    criticality: str = CRIT_LOW
+
+    def spec(self, opcode: int) -> ClassSpec:
+        """The scheduling-policy view of this class (validates knobs)."""
+        return ClassSpec(opcode=opcode, name=self.name,
+                         priority=self.priority, budget_us=self.budget_us,
+                         period_us=self.period_us,
+                         criticality=self.criticality)
 
 
 class LkSystem:
@@ -86,7 +106,9 @@ class LkSystem:
                      Callable[[Cluster], Any]] = None,
                  runtime_factory: Optional[
                      Callable[[Cluster], RuntimeProtocol]] = None,
-                 heal: bool = True):
+                 heal: bool = True,
+                 policy: Union[str, SchedPolicy] = "edf",
+                 default_wcet_us: float = 1000.0):
         self.cm = cluster_manager if cluster_manager is not None else \
             ClusterManager(devices=devices, n_clusters=n_clusters,
                            axis_names=axis_names,
@@ -100,6 +122,8 @@ class LkSystem:
         self._shardings_factory = state_shardings_factory
         self._runtime_factory = runtime_factory
         self._heal = heal
+        self._policy = policy
+        self._default_wcet_us = float(default_wcet_us)
         self._classes: dict[str, WorkClass] = {}
         self._opcodes: dict[str, int] = {}
         self.dispatcher: Optional[Dispatcher] = None
@@ -124,6 +148,7 @@ class LkSystem:
             raise KeyError(f"work class {work_class.name!r} already "
                            "registered")
         opcode = len(self._classes)
+        work_class.spec(opcode)     # validate sched knobs at declare time
         self._classes[work_class.name] = work_class
         self._opcodes[work_class.name] = opcode
         return opcode
@@ -165,9 +190,13 @@ class LkSystem:
                     f"only clusters {sorted(cids)} exist")
         wcet = {self._opcodes[n]: wc.wcet_us
                 for n, wc in self._classes.items() if wc.wcet_us}
+        specs = tuple(wc.spec(self._opcodes[n])
+                      for n, wc in self._classes.items())
         self.dispatcher = Dispatcher(
             {}, wcet_us=wcet, straggler_factor=self._straggler_factor,
             completion_window=self._completion_window,
+            policy=self._policy, classes=specs,
+            default_wcet_us=self._default_wcet_us,
             on_failure=self._on_cluster_failure if self._heal else None)
         for cl in self.cm.healthy_clusters():
             self._add_cluster(cl)

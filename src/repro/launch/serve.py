@@ -31,6 +31,11 @@ def main(argv=None):
     ap.add_argument("--completion-window", type=int, default=1024,
                     help="rolling completion/straggler window kept by the "
                          "dispatcher (stats stay exact beyond it)")
+    ap.add_argument("--policy", choices=("edf", "fp", "server"),
+                    default="edf",
+                    help="scheduling policy: earliest-deadline-first, "
+                         "fixed-priority, or per-class budgeted servers "
+                         "(decode gets a HIGH-criticality 80%% server)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -42,7 +47,8 @@ def main(argv=None):
     tracker = WcetTracker("serve")
     engine = ServingEngine(model, params, max_batch=args.max_batch,
                            max_seq=args.max_seq, tracker=tracker,
-                           completion_window=args.completion_window)
+                           completion_window=args.completion_window,
+                           policy=args.policy)
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
                for _ in range(args.requests)]
@@ -71,6 +77,7 @@ def main(argv=None):
         print(f"[serve] queue_depth avg={qd.avg_ns:5.2f} "
               f"worst={qd.worst_ns:3.0f} n={qd.count}")
     ds = engine.dispatcher.deadline_stats()
+    print(f"[serve] policy={ds.get('policy', '?')} shed={ds.get('shed', 0)}")
     print(f"[serve] dispatcher n={ds['n']} met={ds.get('met', 0)} "
           f"rejected={ds.get('rejected', 0)} "
           f"stragglers={ds.get('stragglers', 0)} "

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import functools
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +34,20 @@ import numpy as np
 from repro.core import mailbox as mb
 from repro.core.dispatcher import Dispatcher
 from repro.core.persistent import PersistentRuntime
+from repro.core.sched import (CRIT_HIGH, CRIT_LOW, BudgetedServerPolicy,
+                              ClassSpec, SchedPolicy)
 from repro.core.wcet import WcetTracker
 from repro.serving.kv_cache import SlotManager, insert_slot_caches
 
 OP_DECODE = 0
 OP_INSERT = 1
+
+# Decode is the latency-critical class: HIGH criticality (it may shed
+# queued LOW work under overload) and — under the budgeted-server policy —
+# a guaranteed 80%-bandwidth server, leaving 20% for inserts/background so
+# neither side can starve the other.
+DECODE_BUDGET_US = 80_000.0
+DECODE_PERIOD_US = 100_000.0
 
 
 class ServingEngine:
@@ -47,7 +56,10 @@ class ServingEngine:
                  tracker: Optional[WcetTracker] = None,
                  dispatcher: Optional[Dispatcher] = None,
                  cluster_id: int = 0, max_inflight: int = 2,
-                 completion_window: Optional[int] = None):
+                 completion_window: Optional[int] = None,
+                 policy: Union[str, SchedPolicy, None] = None,
+                 decode_budget_us: float = DECODE_BUDGET_US,
+                 decode_period_us: float = DECODE_PERIOD_US):
         if completion_window is not None:
             if dispatcher is not None:
                 raise ValueError(
@@ -55,6 +67,10 @@ class ServingEngine:
                     "dispatcher; set it on the shared Dispatcher instead")
             if completion_window < 1:
                 raise ValueError("completion_window must be >= 1")
+        if policy is not None and dispatcher is not None:
+            raise ValueError(
+                "policy configures the engine-owned dispatcher; set it on "
+                "the shared Dispatcher instead")
         self.model = model
         self.cfg = model.cfg
         self.max_batch = max_batch
@@ -116,15 +132,36 @@ class ServingEngine:
             tracker=self.tracker, max_inflight=max_inflight)
         self.rt.boot(state)
 
+        # decode is HIGH-criticality and (under the server policy) runs in
+        # its own bandwidth server; insert is best-effort LOW
+        class_specs = (
+            ClassSpec(opcode=OP_DECODE, name="decode", priority=0,
+                      criticality=CRIT_HIGH, budget_us=decode_budget_us,
+                      period_us=decode_period_us),
+            ClassSpec(opcode=OP_INSERT, name="insert", priority=10,
+                      criticality=CRIT_LOW),
+        )
         if dispatcher is None:
+            if policy == "server":
+                # decode dominates this cluster: budget isolation should
+                # throttle it only when insert work competes, never idle
+                # the device (work-conserving bandwidth servers)
+                policy = BudgetedServerPolicy(work_conserving=True)
             dispatcher = Dispatcher(
                 {cluster_id: self.rt},
                 completion_window=completion_window
-                if completion_window is not None else 1024)
+                if completion_window is not None else 1024,
+                policy=policy, classes=class_specs)
         else:
             # raises if cluster_id is taken — silently adopting another
             # engine's runtime would decode against the wrong state
             dispatcher.register(cluster_id, self.rt)
+            # the spec table is keyed by opcode ACROSS the dispatcher: on
+            # a shared dispatcher the owner's declarations win — only
+            # fill in opcodes nobody has declared yet
+            for spec in class_specs:
+                if dispatcher.policy.spec(spec.opcode) is None:
+                    dispatcher.set_class(spec)
         self.dispatcher = dispatcher
 
         self._stage_jit = jax.jit(self._stage_impl, donate_argnums=(0,))

@@ -2,7 +2,9 @@
 
     from repro.system import LkSystem, WorkClass
 """
-from repro.core.dispatcher import Ticket, TicketCancelled
+from repro.core.dispatcher import AdmissionError, Ticket, TicketCancelled
+from repro.core.sched import CRIT_HIGH, CRIT_LOW, ClassSpec
 from repro.core.system import LkSystem, WorkClass
 
-__all__ = ["LkSystem", "WorkClass", "Ticket", "TicketCancelled"]
+__all__ = ["AdmissionError", "CRIT_HIGH", "CRIT_LOW", "ClassSpec",
+           "LkSystem", "Ticket", "TicketCancelled", "WorkClass"]

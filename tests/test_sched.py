@@ -1,0 +1,634 @@
+"""Scheduling core: EDF-via-policy observational equivalence with the
+pre-refactor heap, fixed-priority ordering, budgeted-server isolation,
+criticality shedding, the shared NO_DEADLINE sentinel, and the explicit
+default-WCET fallback."""
+import heapq
+import warnings
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core.dispatcher import (NO_DEADLINE, AdmissionError, Dispatcher,
+                                   TicketCancelled)
+from repro.core.sched import (CRIT_HIGH, CRIT_LOW, BudgetedServerPolicy,
+                              ClassSpec, EdfPolicy, FixedPriorityPolicy,
+                              make_policy)
+
+
+class FakeClock:
+    """Injectable microsecond clock: deterministic service times and
+    budget replenishment without real sleeping."""
+
+    def __init__(self, t: int = 1_000_000):
+        self.t = t
+
+    def __call__(self) -> int:
+        return self.t
+
+    def advance(self, us: int) -> None:
+        self.t += us
+
+
+class FakeRuntime:
+    """RuntimeProtocol double: each wait() advances the fake clock by the
+    opcode's configured service time."""
+
+    def __init__(self, clock=None, service_us=None, max_inflight=1):
+        self.max_inflight = max_inflight
+        self._clock = clock
+        self._service = dict(service_us or {})
+        self._q = deque()
+
+    def trigger(self, desc):
+        if len(self._q) >= self.max_inflight:
+            raise RuntimeError("pipeline full")
+        self._q.append(desc)
+
+    def ready(self):
+        return bool(self._q)
+
+    def wait(self):
+        desc = self._q.popleft()
+        if self._clock is not None:
+            self._clock.advance(self._service.get(desc.opcode, 10))
+        fg = np.zeros((mb.DESC_WIDTH,), np.int32)
+        fg[mb.W_STATUS] = mb.THREAD_FINISHED
+        fg[mb.W_REQID] = desc.request_id
+        return desc.request_id, fg
+
+    def dispose(self):
+        self._q.clear()
+
+
+# ---------------------------------------------------------------------------
+# observational equivalence: EDF-via-SchedPolicy == pre-refactor heap
+# ---------------------------------------------------------------------------
+
+def _reference_edf(wcet: dict, subs, now: int):
+    """The pre-refactor dispatcher, distilled: a (deadline, seq) heap plus
+    the ad-hoc 'sum the earlier-or-equal deadlines' admission loop.
+    Returns (admission verdicts, retirement order as submission indices)."""
+    heap: list = []
+    verdicts, kept = [], []
+    for i, (opcode, dl_off) in enumerate(subs):
+        deadline = now + dl_off if dl_off else 0
+        if deadline:
+            load = wcet[opcode]
+            for d, _, op in heap:
+                if d <= deadline:
+                    load += wcet[op]
+            if now + load > deadline:
+                verdicts.append(False)
+                continue
+        verdicts.append(True)
+        heapq.heappush(heap, (deadline or NO_DEADLINE, len(kept), opcode))
+        kept.append(i)
+    order = []
+    while heap:
+        order.append(kept[heapq.heappop(heap)[1]])
+    return verdicts, order
+
+
+def _run_dispatcher_edf(wcet: dict, subs, clock):
+    rt = FakeRuntime(clock, service_us={}, max_inflight=1)
+    disp = Dispatcher({0: rt}, wcet_us=dict(wcet), policy="edf",
+                      clock=clock)
+    verdicts = []
+    for i, (opcode, dl_off) in enumerate(subs):
+        deadline = clock() + dl_off if dl_off else 0
+        try:
+            disp.submit(mb.WorkDescriptor(opcode=opcode, request_id=i,
+                                          deadline_us=deadline))
+            verdicts.append(True)
+        except AdmissionError:
+            verdicts.append(False)
+    order = [c.request_id for c in disp.drain()]
+    return verdicts, order
+
+
+def test_edf_policy_matches_reference_simple():
+    wcet = {0: 100.0, 1: 300.0}
+    subs = [(0, 5_000), (1, 900), (0, 0), (1, 350), (0, 120), (1, 2_000)]
+    clock = FakeClock()
+    got_v, got_o = _run_dispatcher_edf(wcet, subs, clock)
+    want_v, want_o = _reference_edf(wcet, subs, 1_000_000)
+    assert got_v == want_v
+    assert got_o == want_o
+
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # dev extra absent
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    _sub = st.tuples(st.integers(0, 2),
+                     st.one_of(st.just(0), st.integers(50, 50_000)))
+
+    @settings(max_examples=60, deadline=None)
+    @given(subs=st.lists(_sub, max_size=25),
+           wcets=st.tuples(*[st.floats(1.0, 5_000.0) for _ in range(3)]))
+    def test_edf_policy_observationally_equivalent(subs, wcets):
+        """Same admission verdicts AND same retirement order as the
+        pre-refactor heap, for any submission sequence."""
+        wcet = {i: w for i, w in enumerate(wcets)}
+        clock = FakeClock()
+        got_v, got_o = _run_dispatcher_edf(wcet, subs, clock)
+        want_v, want_o = _reference_edf(wcet, subs, clock())
+        assert got_v == want_v
+        assert got_o == want_o
+
+
+# ---------------------------------------------------------------------------
+# fixed-priority policy
+# ---------------------------------------------------------------------------
+
+def test_fixed_priority_overrides_deadline_order():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    specs = (ClassSpec(0, "bg", priority=5),
+             ClassSpec(1, "urgent", priority=0))
+    disp = Dispatcher({0: rt}, policy="fp", classes=specs, clock=clock)
+    # the background item holds the EARLIER deadline; EDF would run it
+    # first — fixed priority must not
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=10,
+                                  deadline_us=clock() + 100),
+                admission=False)
+    disp.submit(mb.WorkDescriptor(opcode=1, request_id=20,
+                                  deadline_us=clock() + 1_000_000),
+                admission=False)
+    assert [c.request_id for c in disp.drain()] == [20, 10]
+
+
+def test_rate_monotonic_priority_derivation():
+    pol = FixedPriorityPolicy((ClassSpec(0, "slow", period_us=10_000.0),
+                               ClassSpec(1, "fast", period_us=500.0),
+                               ClassSpec(2, "explicit", priority=3),
+                               ClassSpec(3, "best_effort")))
+    assert pol.priority_of(1) < pol.priority_of(0)     # shorter period
+    assert pol.priority_of(2) == 3
+    assert pol.priority_of(3) > pol.priority_of(0)     # aperiodic last
+
+
+def test_ticket_carries_priority_and_server():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    specs = (ClassSpec(0, "decode", priority=0, budget_us=500.0,
+                       period_us=1_000.0),
+             ClassSpec(1, "bg", priority=7),)
+    disp = Dispatcher({0: rt}, policy="server", classes=specs, clock=clock)
+    t0 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1),
+                     admission=False)
+    t1 = disp.submit(mb.WorkDescriptor(opcode=1, request_id=2),
+                     admission=False)
+    assert t0.priority == 0 and t0.server == "decode"
+    assert t1.priority == 7 and t1.server is None      # unbudgeted
+    disp.drain()
+
+
+# ---------------------------------------------------------------------------
+# budgeted-server policy: isolation + deferral
+# ---------------------------------------------------------------------------
+
+def _server_system(lo_budget=150.0, lo_period=10_000.0):
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100, 1: 100}, max_inflight=1)
+    specs = (ClassSpec(0, "hi", priority=0, criticality=CRIT_HIGH),
+             ClassSpec(1, "lo", priority=5, budget_us=lo_budget,
+                       period_us=lo_period))
+    disp = Dispatcher({0: rt}, policy="server", classes=specs, clock=clock)
+    return clock, disp
+
+
+def test_budget_exhaustion_defers_class():
+    """The LOW flood holds earlier deadlines, but its server budget only
+    covers two steps — the HIGH class runs as soon as the budget runs
+    out, and the flood resumes after replenishment."""
+    clock, disp = _server_system()
+    for i in range(4):
+        disp.submit(mb.WorkDescriptor(opcode=1, request_id=100 + i,
+                                      deadline_us=clock() + 500),
+                    admission=False)
+    for i in range(2):
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=i,
+                                      deadline_us=clock() + 50_000),
+                    admission=False)
+    order = [disp.pump(0).request_id for _ in range(4)]
+    # budget 150µs / service 100µs: two LOW steps, then HIGH cuts in
+    assert order == [100, 101, 0, 1]
+    assert disp.policy.budget_remaining_us(0, 1) == 0.0
+    assert disp.queue_depth(0) == 2                    # deferred, not lost
+    nxt = disp.policy.next_eligible_us(0, clock())
+    assert nxt is not None and nxt > clock()
+    clock.advance(20_000)                              # past replenishment
+    assert [c.request_id for c in disp.drain()] == [102, 103]
+
+
+def test_unbudgeted_class_never_deferred():
+    clock, disp = _server_system()
+    for i in range(3):
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
+                    admission=False)
+    assert [c.request_id for c in disp.drain()] == [0, 1, 2]
+
+
+def test_server_bandwidth_overcommit_rejected():
+    with pytest.raises(ValueError, match="over-committed"):
+        BudgetedServerPolicy((
+            ClassSpec(0, "a", budget_us=600.0, period_us=1_000.0),
+            ClassSpec(1, "b", budget_us=500.0, period_us=1_000.0)))
+    # rejecting the offending class must leave the table usable
+    pol = BudgetedServerPolicy((
+        ClassSpec(0, "a", budget_us=600.0, period_us=1_000.0),))
+    with pytest.raises(ValueError):
+        pol.set_class(ClassSpec(1, "b", budget_us=500.0,
+                                period_us=1_000.0))
+    assert pol.spec(1) is None
+    pol.set_class(ClassSpec(1, "b", budget_us=300.0, period_us=1_000.0))
+
+
+def test_work_conserving_server_runs_exhausted_class_when_idle():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100}, max_inflight=1)
+    pol = BudgetedServerPolicy(work_conserving=True)
+    disp = Dispatcher({0: rt}, policy=pol,
+                      classes=(ClassSpec(0, "only", budget_us=150.0,
+                                         period_us=100_000.0),),
+                      clock=clock)
+    for i in range(4):
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
+                    admission=False)
+    # budget covers ~2 steps, but with no competing class the cluster
+    # must not idle: all four run without waiting for replenishment
+    assert [c.request_id for c in disp.drain()] == [0, 1, 2, 3]
+
+
+def test_fp_response_time_analysis_rejects_infeasible_periodic():
+    """All-periodic table where the middle-priority class passes the
+    backlog demand test but its response-time iteration diverges — the
+    steady-state analysis must reject it (this guarded-out path was dead
+    under the old aperiodic-count check)."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    specs = (ClassSpec(0, "a", priority=0, period_us=1_000.0),
+             ClassSpec(1, "b", priority=1, period_us=5_000.0),
+             ClassSpec(2, "c", priority=2, period_us=10_000.0))
+    disp = Dispatcher({0: rt}, policy="fp", classes=specs,
+                      wcet_us={0: 900.0, 1: 500.0, 2: 100.0}, clock=clock)
+    with pytest.raises(AdmissionError) as ei:
+        disp.submit(mb.WorkDescriptor(opcode=1, request_id=1,
+                                      deadline_us=clock() + 2_000))
+    assert ei.value.test == "response_time"
+    # the top-priority class has no interferers: U = 0.9 is inside the
+    # Liu–Layland bound for one class, so it admits cleanly
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=2,
+                                  deadline_us=clock() + 2_000))
+
+
+def test_mass_cancel_frees_queue_and_drain_is_noop():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    disp = Dispatcher({0: rt}, clock=clock)
+    tickets = [disp.submit(mb.WorkDescriptor(opcode=0, request_id=i),
+                           admission=False) for i in range(50)]
+    for t in tickets:
+        assert t.cancel()
+    assert disp.queue_depth(0) == 0 and not disp.busy
+    assert disp.drain() == []
+    # the tombstones must be physically freed, not retained forever on
+    # an idle dispatcher
+    assert disp.policy.live_items(0) == []
+    assert len(disp.policy._lanes[0].heap) == 0
+
+
+def test_server_supply_capped_by_wall_clock():
+    from repro.core.sched.admission import server_supply_us
+    # a replenishment 1µs before the deadline supplies at most 1µs
+    assert server_supply_us(0.0, 80_000.0, 100_000.0, 49_999, 0,
+                            50_000) == pytest.approx(1.0)
+    # a full budget cannot supply more than the 10µs window left
+    assert server_supply_us(80_000.0, 80_000.0, 100_000.0, 90_000, 0,
+                            10) == pytest.approx(10.0)
+    # boundary at 50ms has a full period of runway (full 80ms budget);
+    # the one at 150ms only has 50ms of wall clock before the deadline
+    assert server_supply_us(100.0, 80_000.0, 100_000.0, 50_000, 0,
+                            200_000) == pytest.approx(
+                                100.0 + 80_000.0 + 50_000.0)
+
+
+def test_server_admission_rejects_wall_clock_infeasible():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    specs = (ClassSpec(0, "metered", budget_us=80_000.0,
+                       period_us=100_000.0),)
+    disp = Dispatcher({0: rt}, policy="server", classes=specs,
+                      wcet_us={0: 50_000.0}, clock=clock)
+    # the server's budget vastly exceeds the demand, but only 10µs of
+    # wall clock remain — physically impossible, must be rejected
+    with pytest.raises(AdmissionError):
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                      deadline_us=clock() + 10))
+
+
+def test_server_admission_counts_cross_class_inflight():
+    """A non-preemptible in-flight step of ANY class occupies the
+    cluster: budgeted-class admission must treat it as carry-in demand,
+    not just same-class work."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 500, 1: 100}, max_inflight=1)
+    specs = (ClassSpec(1, "metered", budget_us=1_000.0,
+                       period_us=100_000.0),)
+    disp = Dispatcher({0: rt}, policy="server", classes=specs,
+                      wcet_us={0: 500.0, 1: 100.0}, clock=clock)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), admission=False)
+    disp.kick(0)          # best-effort step now occupies the cluster
+    # 100µs of own demand + 500µs carry-in cannot fit a 550µs window
+    with pytest.raises(AdmissionError):
+        disp.submit(mb.WorkDescriptor(opcode=1, request_id=2,
+                                      deadline_us=clock() + 550))
+    disp.submit(mb.WorkDescriptor(opcode=1, request_id=3,
+                                  deadline_us=clock() + 2_000))
+    assert len(disp.drain()) == 2
+
+
+def test_fp_utilization_shortcut_not_used_for_tight_deadlines():
+    """Liu–Layland only guarantees deadlines at or beyond the period: a
+    deadline shorter than the period must take the response-time path."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    specs = (ClassSpec(0, "a", priority=0, period_us=1_000.0),
+             ClassSpec(1, "b", priority=1, period_us=1_000.0))
+    disp = Dispatcher({0: rt}, policy="fp", classes=specs,
+                      wcet_us={0: 300.0, 1: 300.0}, clock=clock)
+    # U = 0.6 is inside the LL bound, but R(b) = 600µs: a 350µs relative
+    # deadline is infeasible under one higher-priority arrival
+    with pytest.raises(AdmissionError) as ei:
+        disp.submit(mb.WorkDescriptor(opcode=1, request_id=1,
+                                      deadline_us=clock() + 350))
+    assert ei.value.test == "response_time"
+    disp.submit(mb.WorkDescriptor(opcode=1, request_id=2,
+                                  deadline_us=clock() + 700))  # R=600 fits
+
+
+def test_shedding_prunes_victims_outside_demand_window():
+    """A LOW item whose deadline is far beyond the HIGH item's does not
+    contribute to the failing demand term — it must survive the shed even
+    though it sorts first as a latest-deadline candidate."""
+    clock, disp = _shed_system()
+    far = disp.submit(mb.WorkDescriptor(opcode=1, request_id=50,
+                                        deadline_us=clock() + 10_000_000))
+    lo = [disp.submit(mb.WorkDescriptor(opcode=1, request_id=100 + i,
+                                        deadline_us=clock() + 1_000
+                                        + 100 * i))
+          for i in range(2)]
+    hi = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                       deadline_us=clock() + 1_150))
+    assert disp.shed_total == 1
+    assert not far.cancelled()
+    assert lo[1].cancelled() and not lo[0].cancelled()
+    assert not hi.cancelled()
+    assert len(disp.drain()) == 3
+
+
+def test_make_policy_instance_specs_win():
+    pol = BudgetedServerPolicy((ClassSpec(0, "mine", budget_us=200.0,
+                                          period_us=1_000.0),))
+    out = make_policy(pol, (ClassSpec(0, "theirs", budget_us=900.0,
+                                      period_us=1_000.0),
+                            ClassSpec(1, "gap")))
+    assert out is pol
+    assert pol.spec(0).name == "mine"          # pre-declared spec wins
+    assert pol.spec(1).name == "gap"           # undeclared gap filled
+
+
+def test_injected_clock_deferral_raises_not_livelocks():
+    clock, disp = _server_system()
+    for i in range(4):
+        disp.submit(mb.WorkDescriptor(opcode=1, request_id=100 + i),
+                    admission=False)
+    assert disp.pump(0) is not None
+    assert disp.pump(0) is not None            # budget now exhausted
+    # a fake clock can never advance inside the pump: drain must fail
+    # loudly instead of sleeping real time forever
+    with pytest.raises(RuntimeError, match="injected clock"):
+        disp.drain()
+    clock.advance(20_000)
+    assert len(disp.drain()) == 2              # still recoverable
+
+
+def test_fp_redeclare_rekeys_queued_items():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    disp = Dispatcher({0: rt}, policy="fp", clock=clock)
+    disp.submit(mb.WorkDescriptor(opcode=3, request_id=1),
+                admission=False)               # unknown: best-effort prio
+    disp.submit(mb.WorkDescriptor(opcode=5, request_id=2,
+                                  deadline_us=clock() + 10),
+                admission=False)
+    # promoting opcode 3 AFTER it queued must re-key the lane so pop
+    # order agrees with the new priorities
+    disp.set_class(ClassSpec(3, "now_urgent", priority=0))
+    assert [c.request_id for c in disp.drain()] == [1, 2]
+
+
+def test_class_spec_validation():
+    with pytest.raises(ValueError, match="period_us"):
+        ClassSpec(0, "x", budget_us=100.0)
+    with pytest.raises(ValueError, match="criticality"):
+        ClassSpec(0, "x", criticality="medium")
+    with pytest.raises(ValueError, match="unknown scheduling policy"):
+        make_policy("lottery")
+
+
+# ---------------------------------------------------------------------------
+# criticality shedding
+# ---------------------------------------------------------------------------
+
+def _shed_system():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100, 1: 100}, max_inflight=1)
+    specs = (ClassSpec(0, "decode", criticality=CRIT_HIGH),
+             ClassSpec(1, "bg", criticality=CRIT_LOW))
+    disp = Dispatcher({0: rt}, policy="edf", classes=specs,
+                      wcet_us={0: 400.0, 1: 400.0}, clock=clock)
+    return clock, disp
+
+
+def test_high_sheds_queued_low_to_admit():
+    clock, disp = _shed_system()
+    lo = [disp.submit(mb.WorkDescriptor(opcode=1, request_id=100 + i,
+                                        deadline_us=clock() + 1_000
+                                        + 100 * i))
+          for i in range(2)]
+    # 3×400µs of demand before a +1150µs deadline does not fit — but
+    # cancelling ONE low item makes it fit, and the latest-deadline low
+    # is the victim
+    hi = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                       deadline_us=clock() + 1_150))
+    assert disp.shed_total == 1
+    assert lo[1].cancelled() and not lo[0].cancelled()
+    assert not hi.cancelled()
+    done = disp.drain()
+    assert sorted(c.request_id for c in done) == [1, 100]
+    with pytest.raises(TicketCancelled):
+        lo[1].result()
+    assert disp.deadline_stats()["shed"] == 1
+
+
+def test_shedding_never_cancels_deadline_free_work():
+    """A deadline-free LOW item (e.g. a serving engine's insert handoff
+    being blocked on) is not a shedding victim — it contributes nothing
+    to the failing demand term, and cancelling it would strand its
+    caller."""
+    clock, disp = _shed_system()
+    free = disp.submit(mb.WorkDescriptor(opcode=1, request_id=50),
+                       admission=False)            # no deadline
+    lo = [disp.submit(mb.WorkDescriptor(opcode=1, request_id=100 + i,
+                                        deadline_us=clock() + 1_000
+                                        + 100 * i))
+          for i in range(2)]
+    hi = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                       deadline_us=clock() + 1_150))
+    assert not free.cancelled()                    # protected
+    assert lo[1].cancelled() and not hi.cancelled()
+    assert len(disp.drain()) == 3
+
+
+def test_low_never_sheds_and_hopeless_high_sheds_nothing():
+    clock, disp = _shed_system()
+    lo = [disp.submit(mb.WorkDescriptor(opcode=1, request_id=100 + i,
+                                        deadline_us=clock() + 1_000))
+          for i in range(2)]
+    # a LOW arrival over capacity is rejected outright (no shedding
+    # among equals)...
+    with pytest.raises(AdmissionError):
+        disp.submit(mb.WorkDescriptor(opcode=1, request_id=9,
+                                      deadline_us=clock() + 1_000))
+    # ...and a HIGH item that cannot fit even on an empty cluster is
+    # rejected WITHOUT destroying any queued work (dry-run shedding)
+    with pytest.raises(AdmissionError):
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                      deadline_us=clock() + 300))
+    assert disp.shed_total == 0
+    assert not any(t.cancelled() for t in lo)
+    assert disp.rejected == 2
+    assert len(disp.drain()) == 2
+
+
+# ---------------------------------------------------------------------------
+# admission errors carry the failing analysis term
+# ---------------------------------------------------------------------------
+
+def test_admission_error_terms_edf_demand():
+    clock, disp = _shed_system()
+    with pytest.raises(AdmissionError) as ei:
+        disp.submit(mb.WorkDescriptor(opcode=1, request_id=1,
+                                      deadline_us=clock() + 50))
+    assert ei.value.test == "demand"
+    assert ei.value.term == pytest.approx(400.0)
+    assert ei.value.bound == pytest.approx(50.0)
+
+
+def test_admission_error_terms_server_supply():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    specs = (ClassSpec(0, "metered", budget_us=100.0,
+                       period_us=10_000.0),)
+    disp = Dispatcher({0: rt}, policy="server", classes=specs,
+                      wcet_us={0: 500.0}, clock=clock)
+    with pytest.raises(AdmissionError) as ei:
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                      deadline_us=clock() + 20_000))
+    assert ei.value.test == "supply"
+    assert ei.value.term == pytest.approx(500.0)       # demand
+    # remaining 100 + one mid-window replenishment; the boundary AT the
+    # deadline has no wall clock left to spend
+    assert ei.value.bound == pytest.approx(200.0)      # supply in window
+
+
+# ---------------------------------------------------------------------------
+# satellites: NO_DEADLINE sentinel, default-WCET warning knob
+# ---------------------------------------------------------------------------
+
+def test_no_deadline_sentinel_shared():
+    from repro.core import sched
+    assert mb.NO_DEADLINE == sched.NO_DEADLINE == NO_DEADLINE
+    assert mb.WorkDescriptor(opcode=0).effective_deadline_us == NO_DEADLINE
+    assert mb.WorkDescriptor(opcode=0, deadline_us=5) \
+        .effective_deadline_us == 5
+    # deadline-free items sort after any real deadline in every policy
+    for pol in (EdfPolicy(), FixedPriorityPolicy()):
+        pol.add_cluster(0)
+
+
+def test_default_wcet_knob_warns_once():
+    clock = FakeClock()
+    disp = Dispatcher({0: FakeRuntime(clock)}, default_wcet_us=50.0,
+                      clock=clock)
+    with pytest.warns(RuntimeWarning, match="default_wcet_us"):
+        assert disp._estimate_us(7) == 50.0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")                 # warned once only
+        assert disp._estimate_us(7) == 50.0
+        assert disp._estimate_us(7) == 50.0
+    # the knob feeds admission: a 40µs deadline cannot fit 50µs of work
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(AdmissionError):
+            disp.submit(mb.WorkDescriptor(opcode=8, request_id=1,
+                                          deadline_us=clock() + 40))
+
+
+def test_wcet_sigma_inflates_observed_estimates():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100}, max_inflight=1)
+    disp = Dispatcher({0: rt}, wcet_us={0: 1.0}, wcet_sigma=2.0,
+                      clock=clock)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), admission=False)
+    disp.drain()
+    rt._service[0] = 300
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=2), admission=False)
+    disp.drain()
+    # observed {100, 300}: worst=300, σ=100 → 300 + 2σ = 500
+    assert disp._estimate_us(0) == pytest.approx(500.0)
+
+
+# ---------------------------------------------------------------------------
+# LkSystem / WorkClass plumbing
+# ---------------------------------------------------------------------------
+
+def test_work_class_knobs_reach_policy():
+    import jax.numpy as jnp
+
+    from repro.system import LkSystem, WorkClass
+
+    class Dev:
+        def __init__(self, i):
+            self.id = i
+
+    sys_ = LkSystem(
+        state_factory=lambda cl: None,
+        result_template=jnp.zeros((1,), jnp.float32),
+        devices=[Dev(0), Dev(1)], n_clusters=1, policy="server",
+        runtime_factory=lambda cl: FakeRuntime(max_inflight=1))
+    sys_.register(WorkClass("decode", fn=lambda s, d: (s, None),
+                            wcet_us=200.0, criticality=CRIT_HIGH,
+                            budget_us=800.0, period_us=1_000.0))
+    sys_.register(WorkClass("bg", fn=lambda s, d: (s, None),
+                            priority=9))
+    with pytest.raises(ValueError, match="criticality"):
+        sys_.register(WorkClass("bad", fn=lambda s, d: (s, None),
+                                criticality="extreme"))
+    with sys_:
+        pol = sys_.dispatcher.policy
+        assert pol.name == "server"
+        assert pol.spec(0).budget_us == 800.0
+        assert pol.spec(0).criticality == CRIT_HIGH
+        assert pol.spec(1).priority == 9
+        t = sys_.submit("decode")
+        assert t.server == "decode"
+        t.result()

@@ -110,3 +110,23 @@ def test_slot_manager():
     sm.free(a)
     assert sm.allocate(12, 3, 16) == a
     assert sm.any_active
+
+
+def test_shared_dispatcher_keeps_owner_class_specs():
+    """On a shared dispatcher the owner's ClassSpecs win: the engine only
+    fills opcodes nobody declared (the spec table is global by opcode, so
+    overwriting would corrupt another tenant's scheduling parameters)."""
+    from repro.core.dispatcher import Dispatcher
+    from repro.core.sched import ClassSpec
+
+    cfg = get_config("llama3-8b").reduced()
+    model = build(cfg, ShardCtx.single(kind="decode"))
+    params = model.init(jax.random.key(0))
+    owner_spec = ClassSpec(0, "tenant_decode", priority=3)
+    disp = Dispatcher({}, classes=(owner_spec,))
+    eng = ServingEngine(model, params, max_batch=2, max_seq=32,
+                        dispatcher=disp, cluster_id=5)
+    assert disp.policy.spec(0) is owner_spec          # owner untouched
+    assert disp.policy.spec(1) is not None            # gap filled
+    assert disp.policy.spec(1).name == "insert"
+    eng.dispose()
