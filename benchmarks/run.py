@@ -25,7 +25,7 @@ import traceback
 # repo root on sys.path so ``python benchmarks/run.py`` works from anywhere
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
 
-DEFAULT_JSON = "BENCH_3.json"
+DEFAULT_JSON = "BENCH_4.json"
 
 
 def _row_record(row: str) -> dict:

@@ -26,6 +26,22 @@ time; the ``Mailbox`` keeps the per-cluster in-flight descriptor record, so
 a cluster that dies mid-flight has both its queued AND in-flight work
 replayed on the survivors.
 
+Chunked execution: an item submitted with ``n_chunks > 1`` runs as a
+sequence of resumable chunks, one trigger each. Every chunk retirement is
+a PREEMPTION POINT: the dispatcher asks the policy's ``should_preempt()``
+whether a more urgent head is waiting — if so the remainder descriptor
+(``WorkDescriptor.advance()``) re-enters the NORMAL scheduling lane
+(keeping its original ticket, sequence number and submission time) and
+the urgent work triggers first; otherwise the remainder re-triggers
+immediately, back to back. Tickets stay resolved-once (at the final
+chunk); per-chunk service accumulates into the item, so ``service_us``
+and WCET observation still describe whole items, while a separate
+per-chunk observation stream feeds the collapsed blocking terms in
+admission. A cluster failure replays REMAINDERS, not whole items: the
+mailbox record holds the current-chunk descriptor, so completed chunks
+are never re-run (but note the runtime carry is cluster-local — see
+``PersistentRuntime`` on what chunk fns may keep there).
+
 Submission is ticket-based: ``submit()`` returns a :class:`Ticket` future
 that resolves at retirement time. Callers hold the ticket for exactly their
 request — there is no shared completion list to scan. ``completions`` and
@@ -203,6 +219,7 @@ class Completion:
     service_us: int
     deadline_us: int
     met_deadline: bool
+    chunks: int = 1        # steps the item took (1 = atomic)
 
 
 class Dispatcher:
@@ -217,12 +234,16 @@ class Dispatcher:
                  classes: Sequence[ClassSpec] = (),
                  default_wcet_us: float = 1000.0,
                  wcet_sigma: float = 1.0,
-                 clock: Optional[Callable[[], int]] = None):
+                 clock: Optional[Callable[[], int]] = None,
+                 preemptive: Optional[bool] = None):
         for rt in runtimes.values():
             _require_runtime(rt)
         self.runtimes = dict(runtimes)
-        # ALL queueing/admission decisions live in the policy
-        self.policy: SchedPolicy = make_policy(policy, classes)
+        # ALL queueing/admission decisions live in the policy;
+        # ``preemptive`` (chunk-boundary preemption of chunked work) is a
+        # policy setting — None keeps the policy's own default/instance
+        # configuration
+        self.policy: SchedPolicy = make_policy(policy, classes, preemptive)
         for c in self.runtimes:
             self.policy.add_cluster(c)
         self.mailbox = mb.Mailbox(max(runtimes) + 1 if runtimes else 0)
@@ -236,6 +257,10 @@ class Dispatcher:
         # WCET estimate per opcode (µs) — seeded by caller, refined online
         self.wcet_us = dict(wcet_us or {})
         self._observed: dict[int, list[float]] = {}
+        # per-CHUNK observations of chunked classes — feeds the collapsed
+        # blocking term (one chunk, not one WCET) in admission
+        self._observed_chunk: dict[int, list[float]] = {}
+        self._chunk_estimate_cache: dict[int, float] = {}
         # unknown-opcode fallback: explicit knob, warned once per opcode
         # (a silent magic constant is how admission lies to you)
         self.default_wcet_us = float(default_wcet_us)
@@ -260,6 +285,10 @@ class Dispatcher:
         self.rejected = 0
         self.cancelled_total = 0
         self.shed_total = 0
+        self.preemptions = 0       # remainders requeued past a chunk
+        self.chunks_total = 0      # non-final chunk retirements
+        self.chunk_protocol_errors = 0   # chunked work on a runtime
+        #                                  whose from_gpu can't say so
         self._n_completed = 0
         self._n_met = 0
         self._n_stragglers = 0
@@ -342,17 +371,39 @@ class Dispatcher:
         if ticket.cluster in self.runtimes:
             self.policy.note_cancelled(ticket.cluster, ticket)
 
+    def _inflated_estimate(self, opcode: int, obs_map: dict,
+                           cache: dict) -> Optional[float]:
+        """Memoized ``worst + wcet_sigma·σ`` over one observation stream
+        (whole-item or per-chunk); None when nothing was observed yet."""
+        obs = obs_map.get(opcode)
+        if not obs:
+            return None
+        cached = cache.get(opcode)
+        if cached is None:
+            cached = sched_admission.inflated_wcet(obs, self.wcet_sigma)
+            cache[opcode] = cached
+        return cached
+
+    @staticmethod
+    def _observe(obs_map: dict, cache: dict, opcode: int,
+                 service_us: float) -> list:
+        """Record one observation into a stream (bounded window) and
+        invalidate its memoized estimate; returns the window."""
+        obs = obs_map.setdefault(opcode, [])
+        obs.append(service_us)
+        if len(obs) > 256:
+            del obs[0]
+        cache.pop(opcode, None)
+        return obs
+
     def _estimate_us(self, opcode: int) -> float:
         """Worst-case service estimate: observed worst inflated by
         ``wcet_sigma`` standard deviations of observed jitter; falls back
         to the seeded value, then to ``default_wcet_us`` (warned once)."""
-        obs = self._observed.get(opcode)
-        if obs:
-            cached = self._estimate_cache.get(opcode)
-            if cached is None:
-                cached = sched_admission.inflated_wcet(obs, self.wcet_sigma)
-                self._estimate_cache[opcode] = cached
-            return cached
+        est = self._inflated_estimate(opcode, self._observed,
+                                      self._estimate_cache)
+        if est is not None:
+            return est
         if opcode in self.wcet_us:
             return float(self.wcet_us[opcode])
         if opcode not in self._default_warned:
@@ -363,6 +414,18 @@ class Dispatcher:
                 "seed wcet_us or let the dispatcher observe this class",
                 RuntimeWarning, stacklevel=3)
         return self.default_wcet_us
+
+    def _chunk_estimate_us(self, opcode: int) -> float:
+        """Worst-case length of ONE chunk of an opcode: the class's
+        declared ``chunk_us`` wins, else the jitter-inflated observed
+        per-chunk worst, else the full item estimate (atomic classes —
+        their "chunk" IS the whole item)."""
+        spec = self.policy.spec(opcode)
+        if spec is not None and spec.chunk_us is not None:
+            return float(spec.chunk_us)
+        est = self._inflated_estimate(opcode, self._observed_chunk,
+                                      self._chunk_estimate_cache)
+        return est if est is not None else self._estimate_us(opcode)
 
     def _load(self, cluster: int) -> int:
         return self.queue_depth(cluster) + len(self._inflight[cluster])
@@ -416,7 +479,8 @@ class Dispatcher:
         self.policy.admit(
             cluster, desc, estimate=self._estimate_us,
             inflight=[it.desc for it, _ in self._inflight[cluster]],
-            now_us=self._clock(), ignore=ignore)
+            now_us=self._clock(), ignore=ignore,
+            chunk_estimate=self._chunk_estimate_us)
 
     def _shed_to_admit(self, cluster: int, desc: mb.WorkDescriptor) -> bool:
         """Overload shedding: try to admit a HIGHER-criticality item by
@@ -480,6 +544,14 @@ class Dispatcher:
         item = self.policy.pop_next(cluster, self._clock())
         if item is None:
             return False              # deferred: budget exhausted
+        self._trigger_item(cluster, item)
+        return True
+
+    def _trigger_item(self, cluster: int, item: QueueItem) -> None:
+        """Post + trigger one (possibly mid-item) chunk descriptor. On
+        trigger failure the cluster is retired and its work — this item
+        included, with its ticket attached — replayed (re-raises)."""
+        rt = self.runtimes[cluster]
         t = item.ticket
         if t is not None:
             t._triggered = True
@@ -501,49 +573,111 @@ class Dispatcher:
         assert self.mailbox.depth(cluster) == \
             len(self._inflight[cluster]), \
             "mailbox / dispatcher in-flight records desynced"
-        return True
 
-    def _retire(self, cluster: int) -> Completion:
+    def _step_done(self, item: QueueItem, from_gpu) -> bool:
+        """Did this step FINISH its item? Atomic items and final chunks
+        are always done (the host caps runaway chunk counts); a mid-item
+        chunk reports ``THREAD_PREEMPTED`` from the device, but a chunk
+        fn may also finish early by returning done=True. A runtime whose
+        from_gpu cannot carry the chunk protocol is counted and warned
+        (once) — its chunked items resolve after one step, which would
+        otherwise be silent wrong output."""
+        desc = item.desc
+        if not desc.chunked or desc.chunk + 1 >= desc.n_chunks:
+            return True
+        try:
+            return int(np.asarray(from_gpu)[mb.W_STATUS]) != \
+                mb.THREAD_PREEMPTED
+        except (TypeError, ValueError, IndexError):
+            self.chunk_protocol_errors += 1
+            if self.chunk_protocol_errors == 1:
+                warnings.warn(
+                    "runtime returned a from_gpu without chunk-protocol "
+                    "statuses for a chunked item: treating the step as "
+                    "done — remaining chunks will NOT run (submit "
+                    "n_chunks=1 to such runtimes)", RuntimeWarning,
+                    stacklevel=3)
+            return True
+
+    def _retire(self, cluster: int) -> Optional[Completion]:
         """Block on the cluster's OLDEST in-flight step; observe WCET,
-        flag stragglers, ack the mailbox, charge the policy, resolve the
-        ticket. On wait failure the cluster is retired and queued +
-        in-flight work replayed (re-raises)."""
+        flag stragglers, ack the mailbox, charge the policy. A finished
+        ITEM resolves its ticket and returns its Completion. A finished
+        mid-item CHUNK returns None — this is the PREEMPTION POINT: the
+        remainder either requeues through the normal lane (when the
+        policy's ``should_preempt`` sees a more urgent head) or triggers
+        again immediately. On wait failure the cluster is retired and
+        queued + in-flight work replayed (re-raises)."""
         assert self.mailbox.depth(cluster) == len(self._inflight[cluster]), \
             "mailbox / dispatcher in-flight records desynced"
         item, t0 = self._inflight[cluster][0]
         rt = self.runtimes[cluster]
         try:
-            result, _ = rt.wait()
+            result, from_gpu = rt.wait()
         except Exception:
             self._fail_cluster(cluster)
             raise
         self._inflight[cluster].popleft()
-        self.mailbox.ack(cluster, mb.THREAD_FINISHED, item.desc.request_id)
+        done = self._step_done(item, from_gpu)
+        self.mailbox.ack(
+            cluster, mb.THREAD_FINISHED if done else mb.THREAD_PREEMPTED,
+            item.desc.request_id, chunk=item.desc.chunk)
         start = max(t0, self._last_retire_us.get(cluster, 0))
         end = self._clock()
         self._last_retire_us[cluster] = end
         service = end - start
-        obs = self._observed.setdefault(item.desc.opcode, [])
-        obs.append(service)
-        if len(obs) > 256:
-            del obs[0]
-        self._estimate_cache.pop(item.desc.opcode, None)
+        if item.started_us is None:
+            item.started_us = start
+        item.service_accum_us += service
+        chunked = item.desc.chunked
+        # chunked steps feed the per-CHUNK observation stream (admission's
+        # blocking term); whole-item WCET is observed at the final chunk
+        # from the accumulated service
+        if chunked:
+            obs = self._observe(self._observed_chunk,
+                                self._chunk_estimate_cache,
+                                item.desc.opcode, service)
+        else:
+            obs = self._observe(self._observed, self._estimate_cache,
+                                item.desc.opcode, service)
         avg = float(np.mean(obs))
         if len(obs) >= 8 and service > self.straggler_factor * avg:
             self.stragglers.append((cluster, item.desc.request_id, service))
             self._n_stragglers += 1
         self.policy.on_retire(cluster, item, service, end)
+        if not done:
+            self.chunks_total += 1
+            remainder = QueueItem(
+                deadline_us=item.deadline_us, seq=item.seq,
+                desc=item.desc.advance(), submitted_us=item.submitted_us,
+                ticket=item.ticket, started_us=item.started_us,
+                service_accum_us=item.service_accum_us)
+            if self.policy.should_preempt(cluster, remainder, end):
+                # a more urgent head is waiting: the remainder goes back
+                # through the normal lane (same seq → it resumes exactly
+                # where the running item stood once the urgent work ran)
+                self.preemptions += 1
+                self.policy.enqueue(cluster, remainder)
+            else:
+                self._trigger_item(cluster, remainder)
+            return None
+        if chunked:
+            self._observe(self._observed, self._estimate_cache,
+                          item.desc.opcode, item.service_accum_us)
         comp = Completion(
             request_id=item.desc.request_id, cluster=cluster, result=result,
-            queued_us=start - item.submitted_us, service_us=service,
+            queued_us=item.started_us - item.submitted_us,
+            service_us=item.service_accum_us,
             deadline_us=item.desc.deadline_us,
             met_deadline=(not item.desc.deadline_us
-                          or end <= item.desc.deadline_us))
+                          or end <= item.desc.deadline_us),
+            chunks=item.desc.chunk + 1)
         self.completions.append(comp)
         self._n_completed += 1
         self._n_met += int(comp.met_deadline)
-        self._service_sum_us += service
-        self._service_worst_us = max(self._service_worst_us, service)
+        self._service_sum_us += item.service_accum_us
+        self._service_worst_us = max(self._service_worst_us,
+                                     item.service_accum_us)
         if item.ticket is not None:
             item.ticket._resolve(comp)
         return comp
@@ -578,11 +712,21 @@ class Dispatcher:
             meta = inflight_meta[i][0] if i < len(inflight_meta) else None
             sub = meta.submitted_us if meta is not None else self._clock()
             ticket = meta.ticket if meta is not None else None
-            if ticket is not None:
-                ticket._triggered = False       # queued again → cancellable
-            replay.append(QueueItem(deadline_us=desc.effective_deadline_us,
-                                    seq=next(self._seq), desc=desc,
-                                    submitted_us=sub, ticket=ticket))
+            if ticket is not None and desc.chunk == 0:
+                # queued again → cancellable; mid-item remainders keep
+                # _triggered (the invariant "partial work is never
+                # cancelled" holds through replay too)
+                ticket._triggered = False
+            # a chunked in-flight desc IS the remainder: completed chunks
+            # never re-run, only the current chunk onward replays (the
+            # accumulated service travels with it)
+            replay.append(QueueItem(
+                deadline_us=desc.effective_deadline_us,
+                seq=next(self._seq), desc=desc, submitted_us=sub,
+                ticket=ticket,
+                started_us=meta.started_us if meta is not None else None,
+                service_accum_us=meta.service_accum_us
+                if meta is not None else 0.0))
         replay.extend(queued)
         for it in replay:
             if it.ticket is not None and it.ticket.cancelled():
@@ -604,14 +748,18 @@ class Dispatcher:
         return n
 
     def poll(self) -> list[Completion]:
-        """Retire every already-completed in-flight step (non-blocking)."""
+        """Retire every already-completed in-flight step (non-blocking).
+        Mid-item chunk retirements progress the pump but produce no
+        Completion (the item is still running)."""
         done = []
         progressed = True
         while progressed:
             progressed = False
             for c in list(self.runtimes):
                 if self._inflight.get(c) and self.runtimes[c].ready():
-                    done.append(self._retire(c))
+                    comp = self._retire(c)
+                    if comp is not None:
+                        done.append(comp)
                     progressed = True
         return done
 
@@ -661,13 +809,20 @@ class Dispatcher:
                 raise
             except Exception:
                 progressed += 1   # cluster retired; work already replayed
+        chunks_before = self.chunks_total
         try:
             comp = self.wait_any()
         except AllClustersFailed:
             raise
         except Exception:
             return progressed, None  # cluster retired; work replayed
+        # a retired mid-item CHUNK yields no Completion but IS progress
+        # (its remainder was re-triggered or requeued) — without counting
+        # it the pump would mistake a preemption for an idle round and
+        # sleep toward a budget replenishment that the next kick makes
+        # irrelevant
         if comp is None and not progressed \
+                and self.chunks_total == chunks_before \
                 and not any(self._inflight.values()):
             self._sleep_until_eligible()
         return progressed, comp
@@ -733,6 +888,8 @@ class Dispatcher:
             "rejected": self.rejected,
             "cancelled": self.cancelled_total,
             "shed": self.shed_total,
+            "preemptions": self.preemptions,
+            "chunks": self.chunks_total,
             "policy": self.policy.name,
             "avg_service_us": (self._service_sum_us / self._n_completed
                                if self._n_completed else 0.0),

@@ -15,11 +15,20 @@ Descriptor layout (DESC_WIDTH int32 words per cluster):
   [4] seq_len
   [5] request_id
   [6] deadline_lo  [7] deadline_hi   (u64 microseconds, split)
+  [8] chunk  [9] n_chunks            (resumable-chunk progress words)
+
+Chunked work: an item with ``n_chunks > 1`` is a SEQUENCE of resumable
+chunks — each chunk is one mailbox trigger, and the device answers
+``THREAD_PREEMPTED`` (instead of ``THREAD_FINISHED``) when the chunk
+completed but the item has more chunks to run. The host requeues the
+remainder (``WorkDescriptor.advance()``) through the normal scheduling
+lane, which is what lets a HIGH-criticality arrival slot in between two
+chunks of a long LOW item instead of waiting out its full WCET.
 """
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import jax.numpy as jnp
 import numpy as np
@@ -28,14 +37,16 @@ import numpy as np
 THREAD_INIT = 0        # from_GPU
 THREAD_FINISHED = 1    # from_GPU
 THREAD_WORKING = 2     # from_GPU
+THREAD_PREEMPTED = 3   # from_GPU: chunk done, item has chunks left
 THREAD_NOP = 4         # both directions
 THREAD_EXIT = 8        # to_GPU
 THREAD_WORK = 16       # to_GPU: values >= 16 encode 16 + work_id
 
-DESC_WIDTH = 8
+DESC_WIDTH = 10
 
 # descriptor word indices
-W_STATUS, W_OPCODE, W_ARG0, W_ARG1, W_SEQLEN, W_REQID, W_DL_LO, W_DL_HI = range(8)
+(W_STATUS, W_OPCODE, W_ARG0, W_ARG1, W_SEQLEN, W_REQID, W_DL_LO, W_DL_HI,
+ W_CHUNK, W_NCHUNKS) = range(10)
 
 # Effective deadline of deadline-free work. Descriptors encode "no deadline"
 # as deadline_us == 0 (the wire format's natural zero); every host-side
@@ -54,11 +65,27 @@ class WorkDescriptor:
     seq_len: int = 0
     request_id: int = 0
     deadline_us: int = 0           # absolute deadline, microseconds
+    chunk: int = 0                 # resume point: next chunk to execute
+    n_chunks: int = 1              # 1 = atomic (the pre-chunking behaviour)
 
     @property
     def effective_deadline_us(self) -> int:
         """The deadline as an ordering key: ``NO_DEADLINE`` when unset."""
         return self.deadline_us or NO_DEADLINE
+
+    @property
+    def chunked(self) -> bool:
+        return self.n_chunks > 1
+
+    @property
+    def remaining_chunks(self) -> int:
+        """Chunks left to run, this one included (>= 1 for atomic work)."""
+        return max(self.n_chunks - self.chunk, 1)
+
+    def advance(self) -> "WorkDescriptor":
+        """The remainder descriptor after this chunk completes — what the
+        dispatcher requeues (or re-triggers) at the preemption point."""
+        return replace(self, chunk=self.chunk + 1)
 
     def encode(self) -> np.ndarray:
         d = np.zeros(DESC_WIDTH, np.int32)
@@ -70,6 +97,8 @@ class WorkDescriptor:
         d[W_REQID] = self.request_id
         d[W_DL_LO] = np.uint32(self.deadline_us & 0xFFFFFFFF).view(np.int32)
         d[W_DL_HI] = np.uint32((self.deadline_us >> 32) & 0xFFFFFFFF).view(np.int32)
+        d[W_CHUNK] = self.chunk
+        d[W_NCHUNKS] = self.n_chunks
         return d
 
 
@@ -94,7 +123,8 @@ def decode(desc) -> WorkDescriptor:
     return WorkDescriptor(
         work_id=work_id, opcode=int(d[W_OPCODE]), arg0=int(d[W_ARG0]),
         arg1=int(d[W_ARG1]), seq_len=int(d[W_SEQLEN]),
-        request_id=int(d[W_REQID]), deadline_us=int(dl))
+        request_id=int(d[W_REQID]), deadline_us=int(dl),
+        chunk=int(d[W_CHUNK]), n_chunks=max(int(d[W_NCHUNKS]), 1))
 
 
 def status_of(desc) -> int:
@@ -123,6 +153,11 @@ class Mailbox:
         self.from_gpu = np.zeros((n_clusters, DESC_WIDTH), np.int32)
         self.from_gpu[:, W_STATUS] = THREAD_INIT
         self.inflight: list[deque] = [deque() for _ in range(n_clusters)]
+        # acks whose request_id did not match the oldest pending
+        # descriptor (or that had no pending record at all): the replay
+        # record is left untouched and the discrepancy is counted here
+        # instead of silently corrupting what a failure replay would use
+        self.ack_mismatches = 0
 
     def grow(self, n_clusters: int) -> None:
         """Extend capacity to ``n_clusters`` rows (late cluster register)."""
@@ -147,12 +182,25 @@ class Mailbox:
         for c in range(self.n):
             self.post(c, desc)
 
-    def ack(self, cluster: int, status: int, request_id: int = 0) -> None:
+    def ack(self, cluster: int, status: int, request_id: int = 0,
+            chunk: int = 0) -> None:
+        """Record a device answer and retire the oldest in-flight record.
+
+        Preemption-aware: ``THREAD_PREEMPTED`` retires the CHUNK's record
+        exactly like ``THREAD_FINISHED`` retires an atomic item's — the
+        remainder is a fresh descriptor the dispatcher posts separately.
+        The acked ``request_id`` is validated against the oldest pending
+        descriptor; a mismatch leaves the replay record untouched and is
+        counted on ``ack_mismatches``.
+        """
         self.from_gpu[cluster, W_STATUS] = status
         self.from_gpu[cluster, W_REQID] = request_id
+        self.from_gpu[cluster, W_CHUNK] = chunk
         q = self.inflight[cluster]
-        if q:
+        if q and int(q[0][W_REQID]) == request_id:
             q.popleft()
+        else:
+            self.ack_mismatches += 1
         if not q:
             self.to_gpu[cluster] = nop_descriptor()
 

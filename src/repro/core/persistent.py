@@ -13,9 +13,27 @@ enqueued before the first is retired, so the host keeps feeding mailboxes
 while the device runs (the paper's whole point — async Trigger, separate
 Wait). Steps retire strictly in FIFO order; the chain of donated states
 gives XLA the data dependence that serializes them on device.
+
+Chunked (resumable) work: the full work-fn contract is
+
+    fn(state, carry, desc) -> (state, carry, result, done)
+
+where ``carry`` is the opcode's PRIVATE resumable scratch (one device-
+resident tree per opcode, threaded through every step alongside the
+donated state) and ``done`` is a scalar bool — False means "this chunk
+finished but the item has more chunks", which the step reports to the
+host as ``THREAD_PREEMPTED`` so the dispatcher can requeue the remainder
+(``desc`` carries ``chunk``/``n_chunks``). Legacy two-argument fns
+``fn(state, desc) -> (state, result)`` are auto-wrapped as always-done
+atomic work, so existing work tables keep compiling unchanged. The carry
+is CLUSTER-LOCAL scratch: a remainder replayed onto a different cluster
+after a failure sees that cluster's (freshly booted) carry, so chunk fns
+must either rebuild their progress from ``state`` + the descriptor's
+``chunk`` word or keep cross-chunk results in ``state``.
 """
 from __future__ import annotations
 
+import inspect
 from collections import deque
 from typing import Any, Callable, Optional, Protocol, Sequence, runtime_checkable
 
@@ -25,6 +43,30 @@ import numpy as np
 
 from repro.core import mailbox as mb
 from repro.core.wcet import WcetTracker
+
+
+def _normalize_work_fn(fn: Callable) -> Callable:
+    """Accept both work-fn generations: the chunk-aware
+    ``fn(state, carry, desc) -> (state, carry, result, done)`` passes
+    through; a legacy ``fn(state, desc) -> (state, result)`` is wrapped as
+    atomic always-done work with a pass-through carry. Classification
+    counts REQUIRED positional parameters, so a legacy fn with defaulted
+    extras (``fn(state, desc, cfg=CFG)``) stays legacy."""
+    try:
+        required = sum(
+            1 for p in inspect.signature(fn).parameters.values()
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+            and p.default is p.empty)
+    except (TypeError, ValueError):     # builtins/partials without sigs
+        required = 2
+    if required >= 3:
+        return fn
+
+    def atomic(state, carry, desc):
+        state, result = fn(state, desc)
+        return state, carry, result, jnp.asarray(True)
+
+    return atomic
 
 
 @runtime_checkable
@@ -60,10 +102,15 @@ def _tree_ready(tree) -> bool:
 class PersistentRuntime:
     """One persistent worker (paper: one SM / one cluster).
 
-    work_fns: list of ``fn(state, desc) -> (state, result)``. All fns must
-    return structurally identical (state, result) trees — they are branches
-    of one ``lax.switch``. ``result_template`` gives the result structure
-    returned for NOP steps (zeros).
+    work_fns: list of ``(name, fn)`` or ``(name, fn, carry_template)``.
+    ``fn`` is either chunk-aware ``fn(state, carry, desc) -> (state, carry,
+    result, done)`` or legacy ``fn(state, desc) -> (state, result)`` (auto-
+    wrapped as atomic). All fns must return structurally identical (state,
+    result) trees — they are branches of one ``lax.switch``; each opcode's
+    carry tree is private (initialized from ``carry_template``, a scalar
+    zero when omitted) and device-resident across steps.
+    ``result_template`` gives the result structure returned for NOP steps
+    (zeros).
 
     ``max_inflight`` bounds the in-flight pipeline: ``trigger()`` returns at
     enqueue, ``wait()`` (blocking) / ``poll()`` (non-blocking) retire the
@@ -71,7 +118,7 @@ class PersistentRuntime:
     raises — callers gate on ``can_trigger``.
     """
 
-    def __init__(self, work_fns: Sequence[tuple[str, Callable]],
+    def __init__(self, work_fns: Sequence[tuple],
                  result_template: Any,
                  tracker: Optional[WcetTracker] = None,
                  mesh=None,
@@ -80,14 +127,18 @@ class PersistentRuntime:
                  max_inflight: int = 2):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
-        self.work_names = [n for n, _ in work_fns]
-        self._fns = [f for _, f in work_fns]
+        self.work_names = [entry[0] for entry in work_fns]
+        self._fns = [_normalize_work_fn(entry[1]) for entry in work_fns]
+        self._carry_templates = [
+            entry[2] if len(entry) > 2 else jnp.zeros((), jnp.int32)
+            for entry in work_fns]
         self._result_template = result_template
         self.tracker = tracker or WcetTracker("lk")
         self.mesh = mesh
         self._state_shardings = state_shardings
         self._donate = donate
         self._state = None
+        self._carries = None
         self.max_inflight = int(max_inflight)
         self._inflight: deque[tuple[Any, Any]] = deque()
         self._compiled = None
@@ -95,7 +146,7 @@ class PersistentRuntime:
         self.steps = 0
 
     # ------------------------------------------------------------------
-    def _lk_step(self, state, desc):
+    def _lk_step(self, state, carries, desc):
         status = desc[mb.W_STATUS]
         opcode = jnp.clip(desc[mb.W_OPCODE], 0, len(self._fns) - 1)
         is_work = status >= mb.THREAD_WORK
@@ -103,19 +154,33 @@ class PersistentRuntime:
         zero_result = jax.tree.map(
             lambda x: jnp.zeros(x.shape, x.dtype), self._result_template)
 
-        def nop_branch(state, desc):
-            return state, zero_result
+        def nop_branch(state, carries, desc):
+            return state, carries, zero_result, jnp.asarray(True)
 
-        def work_branch(state, desc):
-            return jax.lax.switch(opcode, self._fns, state, desc)
+        def work_branch(state, carries, desc):
+            def branch(i, fn):
+                def run(state, carries, desc):
+                    state, carry, result, done = fn(state, carries[i], desc)
+                    carries = tuple(carry if j == i else c
+                                    for j, c in enumerate(carries))
+                    return state, carries, result, jnp.asarray(done)
+                return run
+            return jax.lax.switch(
+                opcode, [branch(i, f) for i, f in enumerate(self._fns)],
+                state, carries, desc)
 
-        state, result = jax.lax.cond(is_work, work_branch, nop_branch,
-                                     state, desc)
+        state, carries, result, done = jax.lax.cond(
+            is_work, work_branch, nop_branch, state, carries, desc)
         from_gpu = jnp.zeros((mb.DESC_WIDTH,), jnp.int32)
         from_gpu = from_gpu.at[mb.W_STATUS].set(
-            jnp.where(is_work, mb.THREAD_FINISHED, mb.THREAD_NOP))
+            jnp.where(is_work,
+                      jnp.where(done, mb.THREAD_FINISHED,
+                                mb.THREAD_PREEMPTED),
+                      mb.THREAD_NOP))
         from_gpu = from_gpu.at[mb.W_REQID].set(desc[mb.W_REQID])
-        return state, result, from_gpu
+        from_gpu = from_gpu.at[mb.W_CHUNK].set(desc[mb.W_CHUNK])
+        from_gpu = from_gpu.at[mb.W_NCHUNKS].set(desc[mb.W_NCHUNKS])
+        return state, carries, result, from_gpu
 
     # ------------------------------------------------------------------
     def boot(self, state) -> None:
@@ -123,15 +188,22 @@ class PersistentRuntime:
         with self.tracker.phase("init"):
             kwargs = {}
             if self._donate:
-                kwargs["donate_argnums"] = (0,)
+                kwargs["donate_argnums"] = (0, 1)
             fn = jax.jit(self._lk_step, **kwargs)
             desc0 = jnp.asarray(mb.nop_descriptor())
             if self.mesh is not None and self._state_shardings is not None:
                 state = jax.device_put(state, self._state_shardings)
             else:
                 state = jax.device_put(state)
-            self._compiled = fn.lower(state, desc0).compile()
+            # COPY the templates before donating: device_put on an array
+            # already on device aliases it, and donation would delete the
+            # caller's template out from under every other runtime booted
+            # from the same object (LkSystem boots one per cluster)
+            carries = jax.device_put(tuple(
+                jax.tree.map(jnp.array, t) for t in self._carry_templates))
+            self._compiled = fn.lower(state, carries, desc0).compile()
             self._state = state
+            self._carries = carries
         self.status = mb.THREAD_NOP
 
     # ------------------------------------------------------------------
@@ -147,7 +219,8 @@ class PersistentRuntime:
 
     def trigger(self, desc) -> None:
         """Send one mailbox descriptor (async — returns at enqueue)."""
-        assert self._compiled is not None, "boot() first"
+        if self._compiled is None:
+            raise RuntimeError("boot() first")
         if len(self._inflight) >= self.max_inflight:
             raise RuntimeError(
                 f"in-flight pipeline full (max_inflight={self.max_inflight});"
@@ -156,9 +229,11 @@ class PersistentRuntime:
             desc = desc.encode()
         with self.tracker.phase("trigger"):
             dvec = jnp.asarray(desc)
-            new_state, result, from_gpu = self._compiled(self._state, dvec)
+            new_state, new_carries, result, from_gpu = self._compiled(
+                self._state, self._carries, dvec)
             # async dispatch: we return as soon as the work is enqueued
             self._state = new_state
+            self._carries = new_carries
             self._inflight.append((result, from_gpu))
         self.tracker.record_depth(len(self._inflight))
         self.status = mb.THREAD_WORKING
@@ -212,7 +287,8 @@ class PersistentRuntime:
         ``self.state`` (donated lineage): XLA sequences the derivation after
         every in-flight step that produced it.
         """
-        assert self._compiled is not None, "boot() first"
+        if self._compiled is None:
+            raise RuntimeError("boot() first")
         self._state = new_state
 
     def dispose(self) -> None:
@@ -223,7 +299,11 @@ class PersistentRuntime:
             if self._state is not None:
                 for leaf in jax.tree.leaves(self._state):
                     leaf.delete()
+            if self._carries is not None:
+                for leaf in jax.tree.leaves(self._carries):
+                    leaf.delete()
             self._state = None
+            self._carries = None
             self._compiled = None
         self.status = mb.THREAD_EXIT
 
@@ -239,7 +319,9 @@ class TraditionalRuntime:
 
     def __init__(self, work_fns, result_template,
                  tracker: Optional[WcetTracker] = None):
-        self._fns = dict(work_fns)
+        # legacy 2-arg fns only: the per-call launch baseline has no
+        # persistent carry to thread (any carry template entry is ignored)
+        self._fns = {entry[0]: entry[1] for entry in work_fns}
         self._result_template = result_template
         self.tracker = tracker or WcetTracker("traditional")
         self._host_state = None

@@ -8,7 +8,7 @@ names ``{"edf", "fp", "server"}``.
 """
 from __future__ import annotations
 
-from typing import Sequence, Union
+from typing import Optional, Sequence, Union
 
 from repro.core.sched.admission import AdmissionError
 from repro.core.sched.base import (
@@ -34,16 +34,22 @@ __all__ = [
 
 
 def make_policy(policy: Union[str, SchedPolicy, None],
-                classes: Sequence[ClassSpec] = ()) -> SchedPolicy:
+                classes: Sequence[ClassSpec] = (),
+                preemptive: Optional[bool] = None) -> SchedPolicy:
     """Resolve a policy name (or pass through an instance, feeding it any
     ``classes`` it has not seen — specs already declared on the instance
-    win, mirroring the shared-dispatcher owner-wins rule)."""
+    win, mirroring the shared-dispatcher owner-wins rule). ``preemptive``
+    configures chunk-boundary preemption on by-name construction; a
+    passed-in instance keeps its own setting unless explicitly
+    overridden."""
     if policy is None:
         policy = EdfPolicy.name
     if isinstance(policy, SchedPolicy):
         for spec in classes:
             if policy.spec(spec.opcode) is None:
                 policy.set_class(spec)
+        if preemptive is not None:
+            policy.preemptive = bool(preemptive)
         return policy
     try:
         cls = POLICIES[policy]
@@ -51,4 +57,5 @@ def make_policy(policy: Union[str, SchedPolicy, None],
         raise ValueError(
             f"unknown scheduling policy {policy!r}; "
             f"expected one of {sorted(POLICIES)}") from None
-    return cls(classes)
+    return cls(classes) if preemptive is None \
+        else cls(classes, preemptive=preemptive)

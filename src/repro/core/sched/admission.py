@@ -27,6 +27,7 @@ from typing import Optional, Sequence
 
 __all__ = [
     "AdmissionError", "inflated_wcet", "backlog_demand_us",
+    "remaining_us", "chunk_blocking_us",
     "edf_demand_test", "liu_layland_bound", "utilization_test",
     "response_time", "server_supply_us",
 ]
@@ -62,23 +63,59 @@ def inflated_wcet(observed: Sequence[float], sigma_factor: float) -> float:
     return float(worst + sigma_factor * math.sqrt(var))
 
 
+def remaining_us(desc, estimate, chunk_estimate=None) -> float:
+    """Worst-case work LEFT in a descriptor: for chunked work, the lower
+    of the whole-item estimate and ``remaining_chunks`` chunk lengths —
+    both are upper bounds, and whichever is tighter applies (a requeued
+    remainder demands only what it has not yet run; a fresh item whose
+    class has no chunk estimate yet must not charge n_chunks × its full
+    WCET). Atomic work demands its full estimate."""
+    chunked = getattr(desc, "chunked", False)
+    full = estimate(desc.opcode)
+    if not chunked:
+        return full
+    per_chunk = (chunk_estimate or estimate)(desc.opcode)
+    return min(full, per_chunk * desc.remaining_chunks)
+
+
+def chunk_blocking_us(spec, estimate_us: float, preemptive: bool) -> float:
+    """The blocking a class can inflict on more urgent work: its full
+    WCET when its items are non-preemptible, but only ONE chunk once the
+    class declares ``chunk_us`` under a preemptive policy — the worst
+    term in every response-time bound collapses from "longest WCET in
+    the system" to "one chunk"."""
+    if preemptive and spec is not None and spec.chunk_us is not None:
+        return min(float(spec.chunk_us), estimate_us)
+    return estimate_us
+
+
 def backlog_demand_us(desc, estimate, inflight, items, ignore,
-                      item_counts, inflight_counts=None) -> float:
+                      item_counts, inflight_counts=None,
+                      inflight_us=None, item_us=None,
+                      self_us=None) -> float:
     """Worst-case work that runs before (or around) ``desc``: its own
     estimate, in-flight carry-in, and every live queued item the policy's
     ``item_counts`` predicate selects. ``ignore`` items are treated as
     cancelled (the dispatcher's shed dry-run). The one demand summation
-    every policy shares — the predicates are the policy."""
-    demand = estimate(desc.opcode)
+    every policy shares — the predicates are the policy.
+
+    The ``*_us`` callables override the per-entry contribution (default:
+    the opcode's full ``estimate``); chunk-aware policies pass
+    ``remaining_us``-style contributions so requeued remainders and
+    preemptible in-flight steps are charged for chunks, not whole WCETs.
+    """
+    demand = self_us(desc) if self_us is not None else estimate(desc.opcode)
     for d in inflight:
         if inflight_counts is None or inflight_counts(d):
-            demand += estimate(d.opcode)
+            demand += inflight_us(d) if inflight_us is not None \
+                else estimate(d.opcode)
     skip = set(map(id, ignore))
     for it in items:
         if id(it) in skip:
             continue
         if item_counts(it):
-            demand += estimate(it.desc.opcode)
+            demand += item_us(it) if item_us is not None \
+                else estimate(it.desc.opcode)
     return demand
 
 

@@ -30,6 +30,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Iterable, Optional, Sequence
 
 from repro.core.mailbox import NO_DEADLINE, WorkDescriptor
+from repro.core.sched import admission
 
 __all__ = [
     "NO_DEADLINE", "CRIT_LOW", "CRIT_HIGH", "CRITICALITIES", "crit_rank",
@@ -64,6 +65,14 @@ class ClassSpec:
                   always eligible, no isolation guarantee).
     period_us   — replenishment period / rate-monotonic period.
     criticality — overload-shedding level (``CRIT_LOW`` / ``CRIT_HIGH``).
+    chunk_us    — declared worst-case length of ONE resumable chunk when
+                  this class submits chunked work (``n_chunks > 1``).
+                  Under a preemptive policy this replaces the class's full
+                  WCET in every BLOCKING term of the admission analyses —
+                  the refactor's whole point: a long item no longer blocks
+                  higher-urgency work for its WCET, only for one chunk.
+                  None = unknown (falls back to observed per-chunk worsts,
+                  then to the full WCET estimate).
     """
 
     opcode: int
@@ -72,6 +81,7 @@ class ClassSpec:
     budget_us: Optional[float] = None
     period_us: Optional[float] = None
     criticality: str = CRIT_LOW
+    chunk_us: Optional[float] = None
 
     def __post_init__(self):
         if self.criticality not in CRITICALITIES:
@@ -85,6 +95,8 @@ class ClassSpec:
                     "period_us (a budget replenishes once per period)")
             if self.budget_us <= 0 or self.period_us <= 0:
                 raise ValueError("budget_us and period_us must be > 0")
+        if self.chunk_us is not None and self.chunk_us <= 0:
+            raise ValueError("chunk_us must be > 0")
 
 
 @dataclass
@@ -95,6 +107,13 @@ class QueueItem:
     none) so every policy can compare deadlines without re-checking the
     zero sentinel. Ordering is the POLICY's business — this dataclass is
     deliberately unordered; policies build explicit sort keys.
+
+    A chunked item's REMAINDER re-enters the queue as a new ``QueueItem``
+    that keeps the original ``seq`` (so it sorts exactly where the running
+    item stood), ``submitted_us`` (queueing delay is measured from the
+    ORIGINAL submission) and ``ticket`` (resolved once, at the final
+    chunk); ``started_us``/``service_accum_us`` thread the first-trigger
+    time and the accumulated per-chunk service across the requeues.
     """
 
     deadline_us: int
@@ -102,6 +121,8 @@ class QueueItem:
     desc: WorkDescriptor
     submitted_us: int = 0
     ticket: Any = None
+    started_us: Optional[int] = None
+    service_accum_us: float = 0.0
 
     def cancelled(self) -> bool:
         return self.ticket is not None and self.ticket.cancelled()
@@ -176,12 +197,21 @@ class SchedPolicy(abc.ABC):
 
     name = "abstract"
 
-    def __init__(self, classes: Sequence[ClassSpec] = ()):
+    def __init__(self, classes: Sequence[ClassSpec] = (), *,
+                 preemptive: bool = True):
         self._specs: dict[int, ClassSpec] = {}
         # resolved priorities, memoized — priority_of runs per queued
         # item in admission scans, and the ranks only change at
         # set_class time
         self._prio_cache: dict[int, int] = {}
+        # preemptive=True lets chunked work be displaced at chunk
+        # boundaries (``should_preempt``) and lets admission credit the
+        # collapsed one-chunk blocking term. False pins the pre-chunking
+        # behaviour: a popped item runs all its chunks back to back and
+        # blocks for its full remaining WCET (the configuration the EDF
+        # observational-equivalence property is stated for). Atomic work
+        # is never preempted either way.
+        self.preemptive = bool(preemptive)
         for spec in classes:
             self.set_class(spec)
 
@@ -261,18 +291,43 @@ class SchedPolicy(abc.ABC):
         None when nothing is deferred (work-conserving policies)."""
         return None
 
+    # -- preemption ------------------------------------------------------
+    def should_preempt(self, cluster: int, item: QueueItem,
+                       now_us: int) -> bool:
+        """The dispatcher's preemption point: a chunk of ``item`` just
+        retired and more chunks remain — should the remainder go back
+        through the queue (letting a more urgent head run first), or
+        continue immediately on the cluster? Base policy: never preempt
+        (chunks run back to back, the pre-chunking behaviour)."""
+        return False
+
+    def _inflight_demand_us(self, d: WorkDescriptor, qualifies: bool,
+                            estimate: Callable[[int], float],
+                            chunk_estimate: Callable[[int], float]) -> float:
+        """Carry-in demand of ONE in-flight descriptor: its full remaining
+        work when it must run before the incoming item (``qualifies``) or
+        when the policy cannot preempt it; one chunk otherwise — the
+        collapsed blocking term a preempted item leaves behind."""
+        if qualifies or not self.preemptive or not d.chunked:
+            return admission.remaining_us(d, estimate, chunk_estimate)
+        return chunk_estimate(d.opcode)
+
     # -- admission / accounting -----------------------------------------
     @abc.abstractmethod
     def admit(self, cluster: int, desc: WorkDescriptor, *,
               estimate: Callable[[int], float],
               inflight: Sequence[WorkDescriptor], now_us: int,
-              ignore: Iterable[QueueItem] = ()) -> None:
+              ignore: Iterable[QueueItem] = (),
+              chunk_estimate: Optional[Callable[[int], float]] = None
+              ) -> None:
         """Analytic admission test for ``desc`` on ``cluster``; raises
         :class:`~repro.core.sched.admission.AdmissionError` (carrying the
         failing term) when the item cannot make its deadline under
         worst-case estimates. ``ignore`` items are treated as cancelled —
         the dispatcher uses this to dry-run criticality shedding before
-        actually cancelling anything."""
+        actually cancelling anything. ``chunk_estimate`` gives the
+        worst-case length of ONE chunk of an opcode (defaults to the full
+        ``estimate`` for atomic classes)."""
 
     def on_retire(self, cluster: int, item: QueueItem, service_us: float,
                   now_us: int) -> None:

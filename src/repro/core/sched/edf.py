@@ -22,8 +22,8 @@ from repro.core.sched.base import QueueItem, SchedPolicy, _HeapLane
 class EdfPolicy(SchedPolicy):
     name = "edf"
 
-    def __init__(self, classes=()):
-        super().__init__(classes)
+    def __init__(self, classes=(), *, preemptive: bool = True):
+        super().__init__(classes, preemptive=preemptive)
         self._lanes: dict[int, _HeapLane] = {}
 
     # -- cluster lifecycle ----------------------------------------------
@@ -54,14 +54,39 @@ class EdfPolicy(SchedPolicy):
         if lane is not None:
             lane.tombstone()
 
+    # -- preemption ------------------------------------------------------
+    def should_preempt(self, cluster: int, item: QueueItem,
+                       now_us: int) -> bool:
+        """Preempt a chunked item when the queue head is strictly more
+        urgent under EDF order — (deadline, seq), the same key the lane
+        sorts by, so a requeued remainder pops exactly after every item
+        that would have preempted it."""
+        if not self.preemptive:
+            return False
+        lane = self._lanes.get(cluster)
+        head = lane.peek_live() if lane is not None else None
+        return head is not None and \
+            (head.deadline_us, head.seq) < (item.deadline_us, item.seq)
+
     # -- admission -------------------------------------------------------
     def admit(self, cluster: int, desc: WorkDescriptor, *,
               estimate: Callable[[int], float],
               inflight: Sequence[WorkDescriptor], now_us: int,
-              ignore: Iterable[QueueItem] = ()) -> None:
-        # in-flight work occupies the cluster regardless of deadline;
-        # queued work counts when its deadline is earlier or equal
+              ignore: Iterable[QueueItem] = (),
+              chunk_estimate: Optional[Callable[[int], float]] = None
+              ) -> None:
+        # queued work counts its REMAINING demand when its deadline is
+        # earlier or equal; in-flight work with a later deadline occupies
+        # the cluster for its full remainder only when it cannot be
+        # preempted — one chunk otherwise (the collapsed blocking term)
+        chunk_est = chunk_estimate or estimate
         demand = admission.backlog_demand_us(
             desc, estimate, inflight, self.live_items(cluster), ignore,
-            item_counts=lambda it: it.deadline_us <= desc.deadline_us)
+            item_counts=lambda it: it.deadline_us <= desc.deadline_us,
+            self_us=lambda d: admission.remaining_us(d, estimate, chunk_est),
+            inflight_us=lambda d: self._inflight_demand_us(
+                d, d.effective_deadline_us <= desc.effective_deadline_us,
+                estimate, chunk_est),
+            item_us=lambda it: admission.remaining_us(
+                it.desc, estimate, chunk_est))
         admission.edf_demand_test(now_us, desc.deadline_us, demand)

@@ -31,9 +31,9 @@ from repro.core.sched.base import QueueItem, SchedPolicy, _HeapLane
 class FixedPriorityPolicy(SchedPolicy):
     name = "fp"
 
-    def __init__(self, classes=()):
+    def __init__(self, classes=(), *, preemptive: bool = True):
         self._lanes: dict[int, _HeapLane] = {}
-        super().__init__(classes)
+        super().__init__(classes, preemptive=preemptive)
 
     # -- class registry --------------------------------------------------
     def set_class(self, spec) -> None:
@@ -81,19 +81,45 @@ class FixedPriorityPolicy(SchedPolicy):
         if lane is not None:
             lane.tombstone()
 
+    # -- preemption ------------------------------------------------------
+    def should_preempt(self, cluster: int, item: QueueItem,
+                       now_us: int) -> bool:
+        """Preempt a chunked item when a strictly higher-priority head is
+        queued (equal priority continues — FIFO within a band, matching
+        the (priority, deadline) lane key)."""
+        if not self.preemptive:
+            return False
+        lane = self._lanes.get(cluster)
+        head = lane.peek_live() if lane is not None else None
+        if head is None:
+            return False
+        return self.priority_of(head.desc.opcode) < \
+            self.priority_of(item.desc.opcode)
+
     # -- admission -------------------------------------------------------
     def admit(self, cluster: int, desc: WorkDescriptor, *,
               estimate: Callable[[int], float],
               inflight: Sequence[WorkDescriptor], now_us: int,
-              ignore: Iterable[QueueItem] = ()) -> None:
+              ignore: Iterable[QueueItem] = (),
+              chunk_estimate: Optional[Callable[[int], float]] = None
+              ) -> None:
         my_prio = self.priority_of(desc.opcode)
+        chunk_est = chunk_estimate or estimate
 
-        # 1. backlog demand: everything already triggered plus queued work
-        # at my priority or above runs before (or around) me
+        # 1. backlog demand: queued work at my priority or above runs
+        # before me (charged for its REMAINING chunks); an in-flight
+        # lower-priority step carries in its full remainder only when it
+        # cannot be preempted — one chunk otherwise
         demand = admission.backlog_demand_us(
             desc, estimate, inflight, self.live_items(cluster), ignore,
             item_counts=lambda it:
-                self.priority_of(it.desc.opcode) <= my_prio)
+                self.priority_of(it.desc.opcode) <= my_prio,
+            self_us=lambda d: admission.remaining_us(d, estimate, chunk_est),
+            inflight_us=lambda d: self._inflight_demand_us(
+                d, self.priority_of(d.opcode) <= my_prio,
+                estimate, chunk_est),
+            item_us=lambda it: admission.remaining_us(
+                it.desc, estimate, chunk_est))
         admission.edf_demand_test(now_us, desc.deadline_us, demand)
 
         # 2./3. steady-state analysis over the declared class table —
@@ -118,7 +144,13 @@ class FixedPriorityPolicy(SchedPolicy):
         if rel_deadline >= float(spec.period_us) \
                 and admission.utilization_test(utils):
             return          # within the Liu–Layland bound: feasible
-        blocking = max((estimate(s.opcode) for s in self._specs.values()
+        # priority-ceiling-style blocking: the longest lower-priority
+        # critical section. Chunked execution is what shrinks it — a
+        # class that declares chunk_us can only hold the cluster for ONE
+        # chunk before the preemption point hands it back
+        blocking = max((admission.chunk_blocking_us(
+                            s, estimate(s.opcode), self.preemptive)
+                        for s in self._specs.values()
                         if self.priority_of(s.opcode) > my_prio),
                        default=0.0)
         r = admission.response_time(

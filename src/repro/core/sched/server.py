@@ -81,10 +81,11 @@ class BudgetedServerPolicy(SchedPolicy):
 
     name = "server"
 
-    def __init__(self, classes=(), *, work_conserving: bool = False):
+    def __init__(self, classes=(), *, work_conserving: bool = False,
+                 preemptive: bool = True):
         self._servers: dict[int, dict[int, _Server]] = {}
         self.work_conserving = bool(work_conserving)
-        super().__init__(classes)
+        super().__init__(classes, preemptive=preemptive)
 
     # -- class registry --------------------------------------------------
     def set_class(self, spec: ClassSpec) -> None:
@@ -178,6 +179,36 @@ class BudgetedServerPolicy(SchedPolicy):
             if srv is not None:
                 srv.lane.tombstone()
 
+    def should_preempt(self, cluster: int, item: QueueItem,
+                       now_us: int) -> bool:
+        """Preempt a chunked item when its own server's budget ran dry
+        (the remainder must defer to the replenishment — the hard-
+        reservation contract now binds WITHIN an item, not only between
+        items) or when an eligible head of another class is more urgent
+        under the cross-server (deadline, priority, seq) key. Work-
+        conserving mode relaxes the budget rule only while the cluster
+        would otherwise idle: the moment ANY eligible class has queued
+        work, an exhausted item's remainder must yield to it."""
+        if not self.preemptive:
+            return False
+        servers = self._servers.get(cluster)
+        if servers is None:
+            return False
+        own = servers.get(item.desc.opcode)
+        own_exhausted = own is not None and not own.eligible(now_us)
+        my_key = (item.deadline_us, self.priority_of(item.desc.opcode),
+                  item.seq)
+        for opcode, srv in servers.items():
+            head = srv.lane.peek_live()
+            if head is None or not srv.eligible(now_us):
+                continue
+            if own_exhausted:
+                return True      # eligible work exists: zero-budget yields
+            if (head.deadline_us, self.priority_of(opcode),
+                    head.seq) < my_key:
+                return True
+        return own_exhausted and not self.work_conserving
+
     def next_eligible_us(self, cluster: int,
                          now_us: int) -> Optional[int]:
         """Earliest replenishment among exhausted servers that still hold
@@ -215,25 +246,39 @@ class BudgetedServerPolicy(SchedPolicy):
     def admit(self, cluster: int, desc: WorkDescriptor, *,
               estimate: Callable[[int], float],
               inflight: Sequence[WorkDescriptor], now_us: int,
-              ignore: Iterable[QueueItem] = ()) -> None:
+              ignore: Iterable[QueueItem] = (),
+              chunk_estimate: Optional[Callable[[int], float]] = None
+              ) -> None:
+        chunk_est = chunk_estimate or estimate
+        self_us = lambda d: admission.remaining_us(d, estimate, chunk_est)  # noqa: E731
+        item_us = lambda it: admission.remaining_us(                        # noqa: E731
+            it.desc, estimate, chunk_est)
         spec = self.spec(desc.opcode)
         if spec is None or spec.budget_us is None:
             # best-effort class: conservative global demand test (no
             # server guarantees anything to it)
             demand = admission.backlog_demand_us(
                 desc, estimate, inflight, self.live_items(cluster), ignore,
-                item_counts=lambda it: it.deadline_us <= desc.deadline_us)
+                item_counts=lambda it: it.deadline_us <= desc.deadline_us,
+                self_us=self_us, item_us=item_us,
+                inflight_us=lambda d: self._inflight_demand_us(
+                    d, d.effective_deadline_us <= desc.effective_deadline_us,
+                    estimate, chunk_est))
             admission.edf_demand_test(now_us, desc.deadline_us, demand)
             return
         # budgeted class: same-class demand due by the deadline must fit
-        # the server's supply-bound over [now, deadline]. ALL in-flight
-        # work counts — a non-preemptible step of any class occupies the
+        # the server's supply-bound over [now, deadline]. In-flight work
+        # of ANY class counts — a non-preemptible step occupies the
         # cluster and eats the window, exactly like the blocking term in
-        # fixed-priority analysis
+        # fixed-priority analysis; a preemptible CHUNKED step of another
+        # class eats only one chunk of it
         srv = self._server(cluster, desc.opcode)
         demand = admission.backlog_demand_us(
             desc, estimate, inflight, srv.lane.live_items(), ignore,
-            item_counts=lambda it: it.deadline_us <= desc.deadline_us)
+            item_counts=lambda it: it.deadline_us <= desc.deadline_us,
+            self_us=self_us, item_us=item_us,
+            inflight_us=lambda d: self._inflight_demand_us(
+                d, d.opcode == desc.opcode, estimate, chunk_est))
         srv.replenish(now_us)
         supply = admission.server_supply_us(
             srv.remaining_us, spec.budget_us, spec.period_us,

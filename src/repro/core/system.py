@@ -51,10 +51,12 @@ class WorkClass:
 
     name        — request-class name; also the opcode's row name in every
                   runtime's work table.
-    fn          — ``fn(state, desc) -> (state, result)``; compiled as one
-                  branch of the shared ``lax.switch`` on every cluster
-                  (every cluster can run every class — that is what makes
-                  failure replay universal).
+    fn          — chunk-aware ``fn(state, carry, desc) -> (state, carry,
+                  result, done)`` or legacy ``fn(state, desc) -> (state,
+                  result)``; compiled as one branch of the shared
+                  ``lax.switch`` on every cluster (every cluster can run
+                  every class — that is what makes failure replay
+                  universal).
     wcet_us     — seed worst-case execution time for deadline admission;
                   refined online from observed worsts.
     pin         — manager-cluster index for spatial pinning (paper §II-A),
@@ -67,23 +69,33 @@ class WorkClass:
     criticality — overload-shedding level (``"low"``/``"high"``): on
                   admission failure a HIGH submission may cancel queued
                   LOW work to make room.
+    chunk_us    — declared worst-case length of ONE resumable chunk when
+                  this class submits chunked work (``submit(...,
+                  n_chunks=k)``): collapses the class's blocking term in
+                  every admission analysis from its WCET to one chunk.
+    carry       — per-opcode resumable-carry template (device-resident
+                  scratch threaded through every step); scalar zero when
+                  omitted.
     """
 
     name: str
-    fn: Callable[[Any, Any], tuple]
+    fn: Callable[..., tuple]
     wcet_us: Optional[float] = None
     pin: Optional[int] = None
     priority: Optional[int] = None
     budget_us: Optional[float] = None
     period_us: Optional[float] = None
     criticality: str = CRIT_LOW
+    chunk_us: Optional[float] = None
+    carry: Any = None
 
     def spec(self, opcode: int) -> ClassSpec:
         """The scheduling-policy view of this class (validates knobs)."""
         return ClassSpec(opcode=opcode, name=self.name,
                          priority=self.priority, budget_us=self.budget_us,
                          period_us=self.period_us,
-                         criticality=self.criticality)
+                         criticality=self.criticality,
+                         chunk_us=self.chunk_us)
 
 
 class LkSystem:
@@ -108,7 +120,8 @@ class LkSystem:
                      Callable[[Cluster], RuntimeProtocol]] = None,
                  heal: bool = True,
                  policy: Union[str, SchedPolicy] = "edf",
-                 default_wcet_us: float = 1000.0):
+                 default_wcet_us: float = 1000.0,
+                 preemptive: Optional[bool] = None):
         self.cm = cluster_manager if cluster_manager is not None else \
             ClusterManager(devices=devices, n_clusters=n_clusters,
                            axis_names=axis_names,
@@ -123,6 +136,7 @@ class LkSystem:
         self._runtime_factory = runtime_factory
         self._heal = heal
         self._policy = policy
+        self._preemptive = preemptive
         self._default_wcet_us = float(default_wcet_us)
         self._classes: dict[str, WorkClass] = {}
         self._opcodes: dict[str, int] = {}
@@ -197,6 +211,7 @@ class LkSystem:
             completion_window=self._completion_window,
             policy=self._policy, classes=specs,
             default_wcet_us=self._default_wcet_us,
+            preemptive=self._preemptive,
             on_failure=self._on_cluster_failure if self._heal else None)
         for cl in self.cm.healthy_clusters():
             self._add_cluster(cl)
@@ -237,12 +252,18 @@ class LkSystem:
     def submit(self, work_class: str, *, arg0: int = 0, arg1: int = 0,
                seq_len: int = 0, deadline_us: int = 0,
                request_id: Optional[int] = None,
-               admission: Optional[bool] = None) -> Ticket:
+               admission: Optional[bool] = None,
+               n_chunks: int = 1) -> Ticket:
         """Submit one item of ``work_class``; returns its Ticket.
-        Admission control defaults to on exactly when a deadline is set."""
+        Admission control defaults to on exactly when a deadline is set.
+        ``n_chunks > 1`` submits the item as a sequence of resumable
+        chunks — more urgent work can preempt it at every chunk
+        boundary (the class's fn must honour the chunk contract)."""
         self._require_booted()
         if work_class not in self._classes:
             raise KeyError(work_class)
+        if n_chunks < 1:
+            raise ValueError("n_chunks must be >= 1")
         self.reap()     # retire any lame duck whose backlog has drained —
         #                 result()-only callers never pass through drain()
         desc = mb.WorkDescriptor(
@@ -250,7 +271,7 @@ class LkSystem:
             seq_len=seq_len,
             request_id=request_id if request_id is not None
             else next(self._req_ids),
-            deadline_us=deadline_us)
+            deadline_us=deadline_us, n_chunks=n_chunks)
         return self.dispatcher.submit(
             desc, request_class=work_class,
             admission=bool(deadline_us) if admission is None else admission)
@@ -359,7 +380,8 @@ class LkSystem:
         shardings = (self._shardings_factory(cl)
                      if self._shardings_factory is not None else None)
         rt = PersistentRuntime(
-            [(name, wc.fn) for name, wc in self._classes.items()],
+            [(name, wc.fn) if wc.carry is None else (name, wc.fn, wc.carry)
+             for name, wc in self._classes.items()],
             result_template=self._result_template,
             mesh=cl.mesh if shardings is not None else None,
             state_shardings=shardings,

@@ -36,6 +36,19 @@ def main(argv=None):
                     help="scheduling policy: earliest-deadline-first, "
                          "fixed-priority, or per-class budgeted servers "
                          "(decode gets a HIGH-criticality 80%% server)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="run prefill device-side as resumable chunks "
+                         "through the dispatcher (queued work on a "
+                         "shared dispatcher can cut in at every chunk "
+                         "boundary; admission charges one chunk, not "
+                         "one prompt)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prompt tokens per prefill chunk "
+                         "(default: the prefill bucket size)")
+    ap.add_argument("--no-preempt", action="store_true",
+                    help="disable chunk-boundary preemption (chunks of "
+                         "one item run back to back — the pre-chunking "
+                         "dispatch order)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -48,7 +61,11 @@ def main(argv=None):
     engine = ServingEngine(model, params, max_batch=args.max_batch,
                            max_seq=args.max_seq, tracker=tracker,
                            completion_window=args.completion_window,
-                           policy=args.policy)
+                           policy=args.policy,
+                           chunked_prefill=args.chunked_prefill,
+                           prefill_chunk_tokens=args.prefill_chunk)
+    if args.no_preempt:
+        engine.dispatcher.policy.preemptive = False
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
                for _ in range(args.requests)]
@@ -77,7 +94,9 @@ def main(argv=None):
         print(f"[serve] queue_depth avg={qd.avg_ns:5.2f} "
               f"worst={qd.worst_ns:3.0f} n={qd.count}")
     ds = engine.dispatcher.deadline_stats()
-    print(f"[serve] policy={ds.get('policy', '?')} shed={ds.get('shed', 0)}")
+    print(f"[serve] policy={ds.get('policy', '?')} shed={ds.get('shed', 0)} "
+          f"chunks={ds.get('chunks', 0)} "
+          f"preemptions={ds.get('preemptions', 0)}")
     print(f"[serve] dispatcher n={ds['n']} met={ds.get('met', 0)} "
           f"rejected={ds.get('rejected', 0)} "
           f"stragglers={ds.get('stragglers', 0)} "

@@ -16,6 +16,19 @@ long-running server's dispatcher memory stays O(completion window).
 Prefill runs host-side (one jit per prompt length), then its result is
 staged into runtime state via the public ``PersistentRuntime.update_state``
 and consumed on device by an OP_INSERT step — no private-attribute pokes.
+With ``chunked_prefill=True`` the prompt instead runs device-side as a
+CHUNKED OP_PREFILL item — ``ceil(L / prefill_chunk_tokens)`` resumable
+chunks through the dispatcher, each a preemption point — so a long
+prefill no longer occupies its cluster atomically: work already queued
+on a SHARED dispatcher (another tenant's decode, another engine) cuts in
+at every chunk boundary, the declared ``chunk_us`` collapses admission's
+blocking term from "one whole prompt" to one chunk, and budget charging
+happens per chunk. Note the limit of the single-threaded engine itself:
+the single-entry staging area forces ``add_request`` to resolve the
+prefill ticket before returning, so THIS engine's own decode steps never
+overlap its own prefill — per-slot staging (prompt/caches keyed by slot)
+is the designed follow-up that would let prefill tickets stay
+outstanding across ``step()`` calls.
 
 Phases feed the WcetTracker: Init = boot/compile, Trigger = descriptor
 dispatch, Wait = block_until_ready — directly comparable to paper Tables
@@ -41,6 +54,7 @@ from repro.serving.kv_cache import SlotManager, insert_slot_caches
 
 OP_DECODE = 0
 OP_INSERT = 1
+OP_PREFILL = 2          # present only when chunked_prefill=True
 
 # Decode is the latency-critical class: HIGH criticality (it may shed
 # queued LOW work under overload) and — under the budgeted-server policy —
@@ -59,7 +73,10 @@ class ServingEngine:
                  completion_window: Optional[int] = None,
                  policy: Union[str, SchedPolicy, None] = None,
                  decode_budget_us: float = DECODE_BUDGET_US,
-                 decode_period_us: float = DECODE_PERIOD_US):
+                 decode_period_us: float = DECODE_PERIOD_US,
+                 chunked_prefill: bool = False,
+                 prefill_chunk_tokens: Optional[int] = None,
+                 prefill_chunk_us: Optional[float] = None):
         if completion_window is not None:
             if dispatcher is not None:
                 raise ValueError(
@@ -80,11 +97,27 @@ class ServingEngine:
         self.slots = SlotManager(max_batch)
         self.tracker = tracker or WcetTracker("engine")
         self.cluster = cluster_id
+        self.chunked_prefill = bool(chunked_prefill)
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens
+                                        if prefill_chunk_tokens is not None
+                                        else prefill_bucket)
+        if self.prefill_chunk_tokens < 1:
+            raise ValueError("prefill_chunk_tokens must be >= 1")
 
         caches = model.init_caches(max_batch, max_seq)
         # own a private copy: engine state is donated through every step /
         # insert, which would otherwise invalidate the caller's param buffers
         params = jax.tree.map(jnp.array, params)
+        staging = {
+            "caches": model.init_caches(1, max_seq),
+            "token": jnp.zeros((), jnp.int32),
+            "length": jnp.zeros((), jnp.int32),
+        }
+        if self.chunked_prefill:
+            # device-side prefill reads the prompt from state; the host
+            # stages it once per request (max_seq int32s — tiny next to
+            # the caches it saves re-staging)
+            staging["prompt"] = jnp.zeros((max_seq,), jnp.int32)
         state = {
             "params": params,
             "caches": caches,
@@ -93,11 +126,7 @@ class ServingEngine:
             "active": jnp.zeros((max_batch,), jnp.bool_),
             # prefill → decode handoff area: one batch-1 cache tree plus the
             # first generated token; OP_INSERT copies it into a slot on device
-            "staging": {
-                "caches": model.init_caches(1, max_seq),
-                "token": jnp.zeros((), jnp.int32),
-                "length": jnp.zeros((), jnp.int32),
-            },
+            "staging": staging,
         }
 
         def decode_fn(state, desc):
@@ -126,14 +155,57 @@ class ServingEngine:
                              lengths=lengths, active=active)
             return new_state, jnp.zeros((max_batch,), jnp.int32)
 
+        chunk_tokens = self.prefill_chunk_tokens
+
+        def prefill_fn(state, carry, desc):
+            # chunk-aware (resumable) prefill: chunk k folds tokens
+            # [k·chunk_tokens, ...) of the staged prompt through
+            # decode_step on the batch-1 staging caches — mathematically
+            # the prompt pass, sliced so decode work can preempt between
+            # chunks instead of waiting out the whole prompt. The carry
+            # holds the last sampled token; the evolving caches live in
+            # state["staging"] (chunk 0 resets them), so the remainder is
+            # re-triggerable from the descriptor's chunk word alone.
+            stg = state["staging"]
+            chunk = desc[mb.W_CHUNK]
+            length = desc[mb.W_SEQLEN]
+            start = chunk * chunk_tokens
+            caches0 = jax.tree.map(
+                lambda c: jnp.where(chunk == 0, jnp.zeros_like(c), c),
+                stg["caches"])
+            n = jnp.clip(length - start, 0, chunk_tokens)
+
+            def body(i, acc):
+                caches, _ = acc
+                pos = start + i
+                tok = jax.lax.dynamic_slice(stg["prompt"], (pos,), (1,))
+                logits, caches = model.decode_step(
+                    state["params"], caches, tok[:, None],
+                    jnp.reshape(pos, (1,)))
+                return caches, jnp.argmax(logits[0, 0]).astype(jnp.int32)
+
+            caches, last = jax.lax.fori_loop(0, n, body, (caches0, carry))
+            done = chunk + 1 >= desc[mb.W_NCHUNKS]
+            new_stg = dict(stg, caches=caches, token=last,
+                           length=length.astype(jnp.int32))
+            return (dict(state, staging=new_stg), last,
+                    jnp.zeros((max_batch,), jnp.int32), done)
+
+        work_fns = [("decode", decode_fn), ("insert", insert_fn)]
+        if self.chunked_prefill:
+            work_fns.append(("prefill", prefill_fn,
+                             jnp.zeros((), jnp.int32)))
         self.rt = PersistentRuntime(
-            [("decode", decode_fn), ("insert", insert_fn)],
+            work_fns,
             result_template=jnp.zeros((max_batch,), jnp.int32),
             tracker=self.tracker, max_inflight=max_inflight)
         self.rt.boot(state)
 
         # decode is HIGH-criticality and (under the server policy) runs in
-        # its own bandwidth server; insert is best-effort LOW
+        # its own bandwidth server; insert is best-effort LOW; chunked
+        # prefill is LOW and DECLARES its chunk length, which is what
+        # collapses its blocking term so decode admission sees one chunk,
+        # not one whole prompt
         class_specs = (
             ClassSpec(opcode=OP_DECODE, name="decode", priority=0,
                       criticality=CRIT_HIGH, budget_us=decode_budget_us,
@@ -141,6 +213,11 @@ class ServingEngine:
             ClassSpec(opcode=OP_INSERT, name="insert", priority=10,
                       criticality=CRIT_LOW),
         )
+        if self.chunked_prefill:
+            class_specs += (
+                ClassSpec(opcode=OP_PREFILL, name="prefill", priority=5,
+                          criticality=CRIT_LOW,
+                          chunk_us=prefill_chunk_us),)
         if dispatcher is None:
             if policy == "server":
                 # decode dominates this cluster: budget isolation should
@@ -165,18 +242,26 @@ class ServingEngine:
         self.dispatcher = dispatcher
 
         self._stage_jit = jax.jit(self._stage_impl, donate_argnums=(0,))
+        self._set_prompt_jit = jax.jit(self._set_prompt_impl,
+                                       donate_argnums=(0,))
         self._prefill_jits: dict[int, Any] = {}
         self._step_counter = 0
 
     # ------------------------------------------------------------------
     @staticmethod
     def _stage_impl(state, slot_caches, first_token, length):
-        stg = {
-            "caches": jax.tree.map(lambda t, c: c.astype(t.dtype),
-                                   state["staging"]["caches"], slot_caches),
-            "token": first_token.astype(jnp.int32).reshape(()),
-            "length": length.astype(jnp.int32).reshape(()),
-        }
+        stg = dict(
+            state["staging"],
+            caches=jax.tree.map(lambda t, c: c.astype(t.dtype),
+                                state["staging"]["caches"], slot_caches),
+            token=first_token.astype(jnp.int32).reshape(()),
+            length=length.astype(jnp.int32).reshape(()),
+        )
+        return dict(state, staging=stg)
+
+    @staticmethod
+    def _set_prompt_impl(state, prompt):
+        stg = dict(state["staging"], prompt=prompt.astype(jnp.int32))
         return dict(state, staging=stg)
 
     def _prefill(self, batch: dict, length: int):
@@ -203,7 +288,14 @@ class ServingEngine:
     def add_request(self, request_id: int, prompt: np.ndarray,
                     max_new_tokens: int = 32,
                     extras: Optional[dict] = None) -> Optional[int]:
-        """Prefill a prompt into a free slot. Returns the slot or None."""
+        """Prefill a prompt into a free slot. Returns the slot or None.
+
+        With ``chunked_prefill`` the prompt runs DEVICE-side as a chunked
+        OP_PREFILL item (``ceil(L / prefill_chunk_tokens)`` resumable
+        chunks through the normal dispatcher lane — decode work can
+        preempt it at every chunk boundary); prompts that need ``extras``
+        (VLM/enc-dec) fall back to the host prefill path.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         L = int(prompt.shape[0])
         # the prefill emits the first generated token, so the decode loop
@@ -212,14 +304,33 @@ class ServingEngine:
             request_id, L, min(L + max_new_tokens - 1, self.max_seq - 1))
         if slot is None:
             return None
-        batch = {"tokens": jnp.asarray(prompt[None])}
-        if extras:
-            batch.update({k: jnp.asarray(v)[None] for k, v in extras.items()})
-        logits, caches = self._prefill(batch, L)
-        first = jnp.argmax(logits[0, -1, :]).astype(jnp.int32)
-        self.slots.slots[slot].generated.append(int(first))
-        self.rt.update_state(self._stage_jit(
-            self.rt.state, caches, first, jnp.asarray(L, jnp.int32)))
+        if self.chunked_prefill and not extras:
+            buf = np.zeros((self.max_seq,), np.int32)
+            buf[:L] = prompt
+            self.rt.update_state(self._set_prompt_jit(
+                self.rt.state, jnp.asarray(buf)))
+            n_chunks = -(-L // self.prefill_chunk_tokens)
+            ticket = self.dispatcher.submit(
+                mb.WorkDescriptor(opcode=OP_PREFILL, arg0=slot, seq_len=L,
+                                  request_id=request_id,
+                                  n_chunks=n_chunks),
+                cluster=self.cluster, admission=False)
+            # staging (prompt + evolving caches) is single-entry, exactly
+            # like the host path below: resolve before the next request
+            # may overwrite it
+            ticket.result()
+            first = jnp.asarray(self.rt.state["staging"]["token"])
+            self.slots.slots[slot].generated.append(int(first))
+        else:
+            batch = {"tokens": jnp.asarray(prompt[None])}
+            if extras:
+                batch.update({k: jnp.asarray(v)[None]
+                              for k, v in extras.items()})
+            logits, caches = self._prefill(batch, L)
+            first = jnp.argmax(logits[0, -1, :]).astype(jnp.int32)
+            self.slots.slots[slot].generated.append(int(first))
+            self.rt.update_state(self._stage_jit(
+                self.rt.state, caches, first, jnp.asarray(L, jnp.int32)))
         ticket = self.dispatcher.submit(
             mb.WorkDescriptor(opcode=OP_INSERT, arg0=slot,
                               request_id=request_id),

@@ -1,18 +1,39 @@
-"""Mailbox protocol (paper Table I): statuses, descriptor codec, host API."""
+"""Mailbox protocol (paper Table I): statuses, descriptor codec, chunk
+words, host API, ack validation."""
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # dev extra absent
+    HAVE_HYPOTHESIS = False
+
+    def given(**kw):            # property tests skip, plain tests run
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="dev extra: pip install -e .[dev]")(fn)
+        return deco
+
+    def settings(**kw):
+        return lambda fn: fn
 
 from repro.core import mailbox as mb
 
+if not HAVE_HYPOTHESIS:
+    class st:                               # placeholder strategy names
+        @staticmethod
+        def integers(*a, **kw):
+            return None
+
 
 def test_table_i_status_values():
-    # exact values from the paper
+    # exact values from the paper (THREAD_PREEMPTED is ours: the unused
+    # slot between WORKING and NOP — "chunk done, item has chunks left")
     assert mb.THREAD_INIT == 0
     assert mb.THREAD_FINISHED == 1
     assert mb.THREAD_WORKING == 2
+    assert mb.THREAD_PREEMPTED == 3
     assert mb.THREAD_NOP == 4
     assert mb.THREAD_EXIT == 8
     assert mb.THREAD_WORK == 16
@@ -26,18 +47,85 @@ def test_table_i_status_values():
     seq_len=st.integers(0, 2**20),
     request_id=st.integers(0, 2**31 - 1),
     deadline_us=st.integers(0, 2**63 - 1),
+    chunk=st.integers(0, 2**20),
+    n_chunks=st.integers(1, 2**20),
 )
 @settings(max_examples=200, deadline=None)
 def test_descriptor_roundtrip(work_id, opcode, arg0, arg1, seq_len,
-                              request_id, deadline_us):
+                              request_id, deadline_us, chunk, n_chunks):
+    """encode()→decode() identity — explicitly including deadlines above
+    2^32 (the u64 split words) and the chunk-progress words."""
     d = mb.WorkDescriptor(work_id=work_id, opcode=opcode, arg0=arg0,
                           arg1=arg1, seq_len=seq_len, request_id=request_id,
-                          deadline_us=deadline_us)
+                          deadline_us=deadline_us, chunk=chunk,
+                          n_chunks=n_chunks)
     enc = d.encode()
     assert enc.dtype == np.int32 and enc.shape == (mb.DESC_WIDTH,)
     assert mb.decode(enc) == d
     assert mb.is_work(enc)
     assert mb.status_of(enc) == mb.THREAD_WORK
+
+
+@given(deadline_us=st.integers(2**32, 2**63 - 1))
+@settings(max_examples=50, deadline=None)
+def test_descriptor_roundtrip_deadline_beyond_u32(deadline_us):
+    d = mb.WorkDescriptor(opcode=1, deadline_us=deadline_us)
+    assert mb.decode(d.encode()).deadline_us == deadline_us
+
+
+def test_advance_and_remaining_chunks():
+    d = mb.WorkDescriptor(opcode=2, request_id=7, n_chunks=4)
+    assert d.chunked and d.remaining_chunks == 4
+    r = d.advance()
+    assert (r.chunk, r.n_chunks) == (1, 4)
+    assert r.remaining_chunks == 3
+    assert r.request_id == 7 and r.opcode == 2       # everything else kept
+    atomic = mb.WorkDescriptor(opcode=0)
+    assert not atomic.chunked and atomic.remaining_chunks == 1
+
+
+@given(n_grow=st.integers(1, 8), n_posted=st.integers(0, 6))
+@settings(max_examples=50, deadline=None)
+def test_mailbox_grow_preserves_inflight_records(n_grow, n_posted):
+    """grow() must keep every existing cluster's in-flight FIFO intact —
+    it is the failure-replay record."""
+    box = mb.Mailbox(2)
+    descs = [mb.WorkDescriptor(opcode=i % 3, request_id=100 + i,
+                               deadline_us=2**40 + i, n_chunks=1 + i % 4)
+             for i in range(n_posted)]
+    for d in descs:
+        box.post(1, d.encode())
+    box.grow(2 + n_grow)
+    assert box.n == 2 + n_grow
+    assert box.pending(1) == descs                    # record preserved
+    assert box.depth(1) == n_posted
+    for c in range(2, 2 + n_grow):
+        assert box.cluster_status(c) == mb.THREAD_INIT
+        assert box.depth(c) == 0
+    for d in descs:                                   # and still ackable
+        box.ack(1, mb.THREAD_FINISHED, request_id=d.request_id)
+    assert box.depth(1) == 0 and box.ack_mismatches == 0
+
+
+def test_ack_validates_request_id_against_oldest_pending():
+    """A mismatched ack must not pop (corrupt) the replay record — it is
+    counted instead; THREAD_PREEMPTED acks retire chunk records."""
+    box = mb.Mailbox(1)
+    a = mb.WorkDescriptor(opcode=0, request_id=1, n_chunks=3)
+    b = mb.WorkDescriptor(opcode=0, request_id=2)
+    box.post(0, a.encode())
+    box.post(0, b.encode())
+    box.ack(0, mb.THREAD_FINISHED, request_id=2)      # wrong: oldest is 1
+    assert box.ack_mismatches == 1
+    assert box.pending(0) == [a, b]                   # record intact
+    box.ack(0, mb.THREAD_PREEMPTED, request_id=1, chunk=0)
+    assert box.pending(0) == [b]                      # chunk retired
+    assert box.cluster_status(0) == mb.THREAD_PREEMPTED
+    assert box.from_gpu[0, mb.W_CHUNK] == 0
+    box.ack(0, mb.THREAD_FINISHED, request_id=2)
+    assert box.depth(0) == 0 and box.ack_mismatches == 1
+    box.ack(0, mb.THREAD_FINISHED, request_id=9)      # nothing pending
+    assert box.ack_mismatches == 2
 
 
 def test_nop_exit_descriptors():

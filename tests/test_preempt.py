@@ -1,0 +1,469 @@
+"""Preemptible chunked execution: resumable chunks through runtime,
+dispatcher preemption points, chunk-aware admission, remainder replay,
+and the EDF no-preemption observational equivalence with atomic items."""
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core.dispatcher import Dispatcher, now_us
+from repro.core.persistent import PersistentRuntime
+from repro.core.sched import (AdmissionError, BudgetedServerPolicy,
+                              ClassSpec, EdfPolicy, FixedPriorityPolicy)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                    # dev extra absent
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# real-runtime chunk semantics
+# ---------------------------------------------------------------------------
+
+def accum_fn(state, carry, desc):
+    """Chunk fn: adds arg0 into its carry per chunk; the final chunk
+    reports the accumulated total."""
+    carry = carry + desc[mb.W_ARG0]
+    done = desc[mb.W_CHUNK] + 1 >= desc[mb.W_NCHUNKS]
+    res = jnp.where(done, carry, 0).astype(jnp.float32)[None]
+    return state, carry, res, done
+
+
+def light_fn(state, desc):
+    return state, state["x"].sum()[None] + 1.0
+
+
+def make_rt(max_inflight=1):
+    rt = PersistentRuntime(
+        [("accum", accum_fn, jnp.zeros((), jnp.int32)),
+         ("light", light_fn)],
+        result_template=jnp.zeros((1,), jnp.float32),
+        max_inflight=max_inflight)
+    rt.boot({"x": jnp.zeros((2,), jnp.float32)})
+    return rt
+
+
+def test_runtime_reports_preempted_until_final_chunk():
+    rt = make_rt()
+    for k in range(3):
+        res, fg = rt.run_sync(mb.WorkDescriptor(
+            opcode=0, arg0=2, request_id=5, chunk=k, n_chunks=3))
+        want = mb.THREAD_FINISHED if k == 2 else mb.THREAD_PREEMPTED
+        assert int(fg[mb.W_STATUS]) == want
+        assert int(fg[mb.W_CHUNK]) == k
+    assert float(res[0]) == 6.0                  # carry accumulated 2+2+2
+    rt.dispose()
+
+
+def test_chunked_item_through_dispatcher_resolves_once():
+    rt = make_rt()
+    disp = Dispatcher({0: rt})
+    t = disp.submit(mb.WorkDescriptor(opcode=0, arg0=3, request_id=1,
+                                      n_chunks=4), admission=False)
+    done = disp.drain()
+    assert len(done) == 1                        # chunks are not completions
+    assert t.done() and float(t.result()[0]) == 12.0
+    assert t.completion.chunks == 4
+    s = disp.deadline_stats()
+    assert s["n"] == 1 and s["chunks"] == 3      # 3 non-final retirements
+    assert disp.mailbox.ack_mismatches == 0
+    rt.dispose()
+
+
+def test_high_preempts_low_remainder_under_edf():
+    rt = make_rt()
+    disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=True))
+    base = now_us()
+    t_lo = disp.submit(mb.WorkDescriptor(opcode=0, arg0=1, request_id=1,
+                                         deadline_us=base + 10**9,
+                                         n_chunks=4), admission=False)
+    disp.kick(0)                                 # chunk 0 in flight
+    t_hi = disp.submit(mb.WorkDescriptor(opcode=1, request_id=2,
+                                         deadline_us=base + 1_000),
+                       admission=False)
+    done = disp.drain()
+    assert [c.request_id for c in done] == [2, 1]
+    assert disp.preemptions >= 1
+    assert float(t_lo.result()[0]) == 4.0        # remainder kept its carry
+    assert t_hi.done()
+    rt.dispose()
+
+
+def test_no_preemption_runs_chunks_back_to_back():
+    rt = make_rt()
+    disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=False))
+    base = now_us()
+    disp.submit(mb.WorkDescriptor(opcode=0, arg0=1, request_id=1,
+                                  deadline_us=base + 10**9, n_chunks=4),
+                admission=False)
+    disp.kick(0)
+    disp.submit(mb.WorkDescriptor(opcode=1, request_id=2,
+                                  deadline_us=base + 1_000),
+                admission=False)
+    done = disp.drain()
+    # the earlier-deadline HIGH arrival cannot displace the remainder
+    assert [c.request_id for c in done] == [1, 2]
+    assert disp.preemptions == 0
+    rt.dispose()
+
+
+# ---------------------------------------------------------------------------
+# EDF no-preemption configuration == atomic behaviour (observational
+# equivalence property)
+# ---------------------------------------------------------------------------
+
+def _completion_order(subs, n_chunks_of, preemptive):
+    """Retirement order of a submission sequence where item i runs as
+    n_chunks_of[i] chunks (1 = atomic)."""
+    rt = make_rt()
+    disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=preemptive))
+    base = 1 << 40
+    for i, dl_off in enumerate(subs):
+        disp.submit(mb.WorkDescriptor(opcode=0, arg0=1, request_id=i,
+                                      deadline_us=base + dl_off,
+                                      n_chunks=n_chunks_of[i]),
+                    admission=False)
+    order = [c.request_id for c in disp.drain()]
+    rt.dispose()
+    return order
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(subs=st.lists(st.integers(1, 10**6), min_size=1, max_size=5),
+           chunks=st.lists(st.integers(1, 3), min_size=5, max_size=5))
+    def test_edf_no_preemption_equivalent_to_atomic(subs, chunks):
+        """With preemption off, slicing items into chunks must not change
+        EDF completion order — the PR 3 behaviour, observed through the
+        chunked execution path."""
+        atomic = _completion_order(subs, [1] * len(subs), preemptive=False)
+        chunked = _completion_order(subs, chunks[:len(subs)],
+                                    preemptive=False)
+        assert atomic == chunked
+else:
+    @pytest.mark.skip(reason="dev extra: pip install -e .[dev]")
+    def test_edf_no_preemption_equivalent_to_atomic():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# chunk-aware admission: the blocking term collapses to one chunk
+# ---------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self, t: int = 1_000_000):
+        self.t = t
+
+    def __call__(self) -> int:
+        return self.t
+
+    def advance(self, us: int) -> None:
+        self.t += us
+
+
+class FakeRuntime:
+    """RuntimeProtocol double that speaks the chunk protocol: a chunked
+    descriptor's non-final chunk answers THREAD_PREEMPTED."""
+
+    def __init__(self, clock=None, service_us=None, max_inflight=1):
+        self.max_inflight = max_inflight
+        self._clock = clock
+        self._service = dict(service_us or {})
+        self._q = deque()
+        self._served_chunks = []
+
+    def trigger(self, desc):
+        if len(self._q) >= self.max_inflight:
+            raise RuntimeError("pipeline full")
+        self._q.append(desc)
+
+    def ready(self):
+        return bool(self._q)
+
+    def wait(self):
+        desc = self._q.popleft()
+        self._served_chunks.append(desc)
+        if self._clock is not None:
+            self._clock.advance(self._service.get(desc.opcode, 10))
+        fg = np.zeros((mb.DESC_WIDTH,), np.int32)
+        done = desc.chunk + 1 >= desc.n_chunks
+        fg[mb.W_STATUS] = mb.THREAD_FINISHED if done else mb.THREAD_PREEMPTED
+        fg[mb.W_REQID] = desc.request_id
+        fg[mb.W_CHUNK] = desc.chunk
+        return desc.request_id, fg
+
+    def dispose(self):
+        self._q.clear()
+
+
+def test_edf_admission_counts_inflight_chunk_not_wcet():
+    """A preemptible chunked LOW item in flight blocks an urgent arrival
+    for ONE chunk, not its whole WCET: admission must accept deadlines
+    that only a collapsed blocking term can meet."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100, 1: 100}, max_inflight=1)
+    specs = (ClassSpec(0, "long", chunk_us=100.0),
+             ClassSpec(1, "urgent"))
+    disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=True),
+                      classes=specs, wcet_us={0: 1_000.0, 1: 50.0},
+                      clock=clock)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                  deadline_us=clock() + 10_000,
+                                  n_chunks=10), admission=False)
+    disp.kick(0)         # one 100µs chunk is in flight, 900µs remain
+    # 50 (own) + 100 (one chunk of blocking) = 150 fits a 200µs deadline;
+    # the old full-WCET carry-in (1000µs remaining) would reject it
+    disp.submit(mb.WorkDescriptor(opcode=1, request_id=2,
+                                  deadline_us=clock() + 200))
+    assert len(disp.drain()) == 2
+
+
+def test_edf_admission_nonpreemptive_counts_full_remainder():
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100, 1: 100}, max_inflight=1)
+    specs = (ClassSpec(0, "long", chunk_us=100.0),
+             ClassSpec(1, "urgent"))
+    disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=False),
+                      classes=specs, wcet_us={0: 1_000.0, 1: 50.0},
+                      clock=clock)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                  deadline_us=clock() + 10_000,
+                                  n_chunks=10), admission=False)
+    disp.kick(0)
+    # without preemption the in-flight item's remaining chunks all block
+    with pytest.raises(AdmissionError):
+        disp.submit(mb.WorkDescriptor(opcode=1, request_id=2,
+                                      deadline_us=clock() + 200))
+    clock.advance(20_000)
+    disp.drain()
+
+
+def test_fp_blocking_term_uses_chunk_length():
+    """The fixed-priority response-time blocking term (longest lower-
+    priority step) collapses to the declared chunk_us: a deadline that
+    only fits under one-chunk blocking must admit."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, max_inflight=1)
+    specs = (ClassSpec(0, "hi", priority=0, period_us=10_000.0),
+             ClassSpec(1, "long_lo", priority=9, chunk_us=50.0))
+    disp = Dispatcher({0: rt}, policy="fp", classes=specs,
+                      wcet_us={0: 100.0, 1: 5_000.0}, clock=clock)
+    # R(hi) = C + B = 100 + 50 (one chunk) = 150 <= 200; with the full
+    # 5000µs WCET as blocking it would be rejected
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                  deadline_us=clock() + 200))
+    # and a NON-preemptive policy must still use the full WCET
+    disp2 = Dispatcher({0: FakeRuntime(clock, max_inflight=1)},
+                       policy=FixedPriorityPolicy(preemptive=False),
+                       classes=specs, wcet_us={0: 100.0, 1: 5_000.0},
+                       clock=clock)
+    with pytest.raises(AdmissionError):
+        disp2.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                       deadline_us=clock() + 200))
+    disp.drain()
+
+
+def test_server_preempts_when_budget_exhausted_mid_item():
+    """A chunked item whose class budget runs dry mid-item defers its
+    REMAINDER to the replenishment — the bandwidth contract binds within
+    items, not only between them."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100}, max_inflight=1)
+    specs = (ClassSpec(0, "metered", budget_us=150.0,
+                       period_us=10_000.0),)
+    disp = Dispatcher({0: rt}, policy="server", classes=specs, clock=clock)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1, n_chunks=4),
+                admission=False)
+    # two 100µs chunks exhaust the 150µs budget; the remainder defers
+    assert disp.pump(0) is None                    # chunk 0
+    assert disp.pump(0) is None                    # chunk 1: budget dry
+    assert disp.queue_depth(0) == 1                # remainder requeued
+    assert disp.preemptions >= 1
+    clock.advance(20_000)                          # replenish
+    done = disp.drain()
+    assert [c.request_id for c in done] == [1]
+    assert done[0].chunks == 4
+
+
+def test_remainder_not_whole_item_replays_on_failure():
+    """A cluster dying mid-item replays the REMAINDER descriptor (current
+    chunk onward) on a survivor — completed chunks never re-run."""
+    clock = FakeClock()
+
+    class DiesAfterChunk(FakeRuntime):
+        def __init__(self, clock):
+            super().__init__(clock, max_inflight=1)
+            self.served = 0
+
+        def wait(self):
+            if self.served >= 2:        # die at the third chunk
+                raise RuntimeError("cluster died")
+            self.served += 1
+            return super().wait()
+
+    bad = DiesAfterChunk(clock)
+    good = FakeRuntime(clock, max_inflight=1)
+    disp = Dispatcher({0: bad, 1: good}, clock=clock)
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=7, n_chunks=5),
+                    cluster=0, admission=False)
+    done = disp.drain()
+    assert 0 not in disp.runtimes
+    assert [c.request_id for c in done] == [7]
+    assert t.completion.cluster == 1
+    # chunks 0 and 1 ran on the dead cluster; the survivor saw only the
+    # replayed remainder (chunk 2 onward — 3 triggers, requeued none)
+    assert [d.chunk for d in good._served_chunks] == [2, 3, 4]
+
+
+def test_shared_carry_template_survives_multiple_runtimes():
+    """Two runtimes booted from the SAME carry template object (exactly
+    what LkSystem does, one runtime per cluster): donation must consume
+    a private copy, never the caller's template."""
+    template = jnp.zeros((), jnp.int32)
+    rts = []
+    for _ in range(2):
+        rt = PersistentRuntime([("accum", accum_fn, template)],
+                               result_template=jnp.zeros((1,), jnp.float32))
+        rt.boot({"x": jnp.zeros((2,), jnp.float32)})
+        rts.append(rt)
+    for rt in rts:
+        res, _ = rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=7,
+                                               request_id=1, n_chunks=1))
+        assert float(res[0]) == 7.0
+        rt.dispose()
+    assert int(template) == 0                     # caller's object intact
+
+
+def test_work_conserving_exhausted_item_yields_to_eligible_class():
+    """work_conserving only relaxes the budget while the cluster would
+    IDLE: an exhausted chunked item must still yield its remainder to an
+    eligible class with queued work."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100, 1: 100}, max_inflight=1)
+    pol = BudgetedServerPolicy(work_conserving=True)
+    specs = (ClassSpec(0, "metered", budget_us=150.0, period_us=100_000.0),
+             ClassSpec(1, "other"),)
+    disp = Dispatcher({0: rt}, policy=pol, classes=specs, clock=clock)
+    t0 = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1, n_chunks=4),
+                     admission=False)
+    t1 = disp.submit(mb.WorkDescriptor(opcode=1, request_id=2),
+                     admission=False)
+    done = disp.drain()
+    # two 100µs chunks drain the budget; the eligible class runs next,
+    # THEN the exhausted remainder finishes opportunistically (no idle)
+    assert [c.request_id for c in done] == [2, 1]
+    assert t0.done() and t1.done()
+    assert disp.preemptions >= 1
+
+
+def test_fp_equal_priority_does_not_preempt():
+    """FP preemption is strictly-higher-priority only: an equal-priority
+    earlier-deadline arrival continues FIFO within the band."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 10, 1: 10}, max_inflight=1)
+    specs = (ClassSpec(0, "a", priority=5), ClassSpec(1, "b", priority=5))
+    disp = Dispatcher({0: rt}, policy="fp", classes=specs, clock=clock)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                  deadline_us=clock() + 10**6,
+                                  n_chunks=3), admission=False)
+    disp.kick(0)
+    disp.submit(mb.WorkDescriptor(opcode=1, request_id=2,
+                                  deadline_us=clock() + 100),
+                admission=False)
+    assert [c.request_id for c in disp.drain()] == [1, 2]
+    assert disp.preemptions == 0
+
+
+def test_legacy_fn_with_defaulted_extra_param_stays_legacy():
+    """A pre-chunking work fn with a defaulted extra parameter must
+    still be classified (and wrapped) as a legacy 2-arg fn."""
+    def legacy(state, desc, scale=2.0):
+        state = dict(state)
+        state["x"] = state["x"] * scale
+        return state, state["x"].sum()[None]
+
+    rt = PersistentRuntime([("legacy", legacy)],
+                           result_template=jnp.zeros((1,), jnp.float32))
+    rt.boot({"x": jnp.ones((2,), jnp.float32)})
+    res, fg = rt.run_sync(mb.WorkDescriptor(opcode=0, request_id=1))
+    assert float(res[0]) == 4.0
+    assert int(fg[mb.W_STATUS]) == mb.THREAD_FINISHED
+    rt.dispose()
+
+
+def test_replayed_remainder_stays_uncancellable():
+    """Failure replay of a mid-item remainder must not reopen the cancel
+    window — partial work is never cancelled, through replay too."""
+    clock = FakeClock()
+
+    class DiesAtThirdChunk(FakeRuntime):
+        def __init__(self, clock):
+            super().__init__(clock, max_inflight=1)
+            self.served = 0
+
+        def wait(self):
+            if self.served >= 2:
+                raise RuntimeError("cluster died")
+            self.served += 1
+            return super().wait()
+
+    bad = DiesAtThirdChunk(clock)
+    good = FakeRuntime(clock, max_inflight=1)
+    disp = Dispatcher({0: bad, 1: good}, clock=clock)
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=7, n_chunks=5),
+                    cluster=0, admission=False)
+    with pytest.raises(RuntimeError, match="died"):
+        while True:
+            disp.kick(0)
+            disp.poll()
+    assert t.cluster == 1                      # remainder replayed
+    assert not t.cancel()                      # window stays closed
+    disp.drain()
+    assert t.done() and t.completion.chunks == 5
+
+
+def test_chunked_work_on_protocol_ignorant_runtime_warns():
+    """A runtime whose from_gpu cannot carry the chunk statuses resolves
+    chunked items after one step — counted and warned, never silent."""
+    class NoProtocol:
+        max_inflight = 1
+
+        def __init__(self):
+            self._q = deque()
+
+        def trigger(self, desc):
+            self._q.append(desc)
+
+        def ready(self):
+            return bool(self._q)
+
+        def wait(self):
+            return self._q.popleft().request_id, None    # no status word
+
+    disp = Dispatcher({0: NoProtocol()})
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1, n_chunks=4),
+                    admission=False)
+    with pytest.warns(RuntimeWarning, match="chunk-protocol"):
+        disp.drain()
+    assert t.done() and t.completion.chunks == 1
+    assert disp.chunk_protocol_errors == 1
+
+
+def test_ticket_not_cancellable_mid_item():
+    rt = make_rt()
+    disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=True))
+    t = disp.submit(mb.WorkDescriptor(opcode=0, arg0=1, request_id=1,
+                                      n_chunks=3), admission=False)
+    assert t.cancel()                    # still queued: cancellable
+    t2 = disp.submit(mb.WorkDescriptor(opcode=0, arg0=1, request_id=2,
+                                       n_chunks=3), admission=False)
+    disp.kick(0)                         # first chunk in flight
+    assert not t2.cancel()               # mid-item: not cancellable
+    disp.drain()
+    assert t2.done()
+    rt.dispose()

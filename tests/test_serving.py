@@ -101,6 +101,41 @@ def test_shared_dispatcher_two_engines():
     eng.dispose()
 
 
+def test_chunked_prefill_matches_host_prefill():
+    """Device-side chunked prefill (resumable OP_PREFILL chunks through
+    the dispatcher) must generate exactly what the host prefill path
+    does — same caches, same first token, same decode trajectory."""
+    cfg, model, params, eng = make_engine()
+    prompts = [np.array([1, 2, 3, 4, 5]), np.array([9, 8, 7])]
+    want = eng.generate(prompts, max_new_tokens=5)
+    eng.dispose()
+    eng2 = ServingEngine(model, params, max_batch=3, max_seq=64,
+                         chunked_prefill=True, prefill_chunk_tokens=2)
+    got = eng2.generate(prompts, max_new_tokens=5)
+    stats = eng2.dispatcher.deadline_stats()
+    eng2.dispose()
+    assert got == want
+    # 5- and 3-token prompts at 2 tokens/chunk: 3 + 2 chunks, of which
+    # 2 + 1 retire as non-final THREAD_PREEMPTED steps
+    assert stats["chunks"] == 3
+    # the prefill class declared its chunk so admission's blocking term
+    # can collapse
+    assert eng2.dispatcher.policy.spec(2).name == "prefill"
+
+
+def test_chunked_prefill_single_chunk_short_prompt():
+    """A prompt shorter than one chunk runs as a single FINISHED step."""
+    cfg, model, params, _eng = make_engine(max_batch=2)
+    _eng.dispose()
+    eng = ServingEngine(model, params, max_batch=2, max_seq=64,
+                        chunked_prefill=True, prefill_chunk_tokens=64)
+    prompts = [np.array([4, 5, 6])]
+    outs = eng.generate(prompts, max_new_tokens=3)
+    assert outs[0] == sequential_greedy(model, params, prompts[0], 3)
+    assert eng.dispatcher.deadline_stats()["chunks"] == 0
+    eng.dispose()
+
+
 def test_slot_manager():
     sm = SlotManager(2)
     a = sm.allocate(10, 4, 16)
