@@ -23,7 +23,11 @@ HIGH arrival waits behind one LONG in-flight LOW item (HIGH arrival →
 first HIGH trigger). Atomic, the wait is the LOW item's full remaining
 WCET; chunked (same total work sliced into resumable chunks), it is
 bounded by ONE chunk — the collapsed blocking term, reported as
-``dispatch_preempt_*`` rows.
+``dispatch_preempt_*`` rows. Latencies come from the telemetry
+subsystem (TRIGGER-event timestamps on an attached TraceCollector), not
+hand timers, and are reported as distributions: the
+``dispatch_*_{p50,p95,p99}_us`` rows are the collector's log-histogram
+quantiles over repeated probes.
 """
 from __future__ import annotations
 
@@ -37,6 +41,7 @@ from repro.core import mailbox as mb
 from repro.core.dispatcher import Dispatcher, now_us
 from repro.core.persistent import PersistentRuntime, TraditionalRuntime
 from repro.core.sched import CRIT_HIGH, CRIT_LOW, ClassSpec, EdfPolicy
+from repro.core.telemetry import EV_TRIGGER, LogHistogram, TraceCollector
 
 REPS = 100
 PIPE_ITEMS = 16       # N >= 4 work items for the pipelined-vs-sync arm
@@ -87,7 +92,8 @@ def _run_traditional(batch: int, reps: int):
     return rt.tracker
 
 
-def _make_dispatcher(max_inflight: int) -> Dispatcher:
+def _make_dispatcher(max_inflight: int,
+                     telemetry: TraceCollector = None) -> Dispatcher:
     runtimes = {}
     for c in range(PIPE_CLUSTERS):
         rt = PersistentRuntime([("work", _work)],
@@ -95,7 +101,7 @@ def _make_dispatcher(max_inflight: int) -> Dispatcher:
                                max_inflight=max_inflight)
         rt.boot(_make_state(64, dim=512))
         runtimes[c] = rt
-    return Dispatcher(runtimes)
+    return Dispatcher(runtimes, telemetry=telemetry)
 
 
 def _submit_all(disp: Dispatcher, items: int) -> list:
@@ -147,11 +153,14 @@ def _run_pipelined_arm(items: int, reps: int):
     return out
 
 
-def _run_ticket_arm(items: int) -> float:
+def _run_ticket_arm(items: int) -> tuple[float, dict]:
     """Ticket-resolution cost: submit the items, then resolve each ticket
     in submit order via ``result()`` — the wait_for event pump keeps every
-    pipeline full while the caller blocks on one future at a time."""
-    disp = _make_dispatcher(2)
+    pipeline full while the caller blocks on one future at a time. The
+    attached TraceCollector's response-latency histogram supplies the
+    per-item distribution (submit → resolve, p50/p95/p99/worst)."""
+    tc = TraceCollector()
+    disp = _make_dispatcher(2, telemetry=tc)
     for c in disp.runtimes:
         disp.runtimes[c].run_sync(mb.WorkDescriptor(opcode=0,
                                                     request_id=999))
@@ -163,7 +172,9 @@ def _run_ticket_arm(items: int) -> float:
     assert all(t.done() for t in tickets)
     for rt in disp.runtimes.values():
         rt.dispose()
-    return elapsed_us / items
+    dist = tc.hist("response_us", 0).summary()
+    assert dist["count"] == items
+    return elapsed_us / items, dist
 
 
 # ----------------------------------------------------------------------
@@ -188,7 +199,14 @@ def _preempt_hi(state, desc):
     return dict(state, hi_x=x), x.sum()[None]
 
 
-def _run_preempt_arm_once(blocks: int) -> dict:
+def _run_preempt_arm_once(blocks: int, probes: int) -> dict:
+    """One traced measurement set: ``probes`` repeats of the HIGH-behind-
+    one-LOW experiment per discipline, latencies derived from the
+    TraceCollector's TRIGGER events (HIGH's first trigger timestamp minus
+    LOW's — the arrival is the instant the LOW step entered flight, since
+    the synchronous backend keeps the host stuck inside kick() until the
+    step completes) instead of hand timers. Returns per-discipline
+    LogHistogram summaries, so the BENCH rows carry a distribution."""
     rt = PersistentRuntime(
         [("lo", _preempt_lo, jnp.zeros((), jnp.int32)),
          ("hi", _preempt_hi)],
@@ -205,29 +223,31 @@ def _run_preempt_arm_once(blocks: int) -> dict:
     out = {"chunk_us": chunk_us}
     for label, n_chunks, arg0 in (("atomic", 1, blocks),
                                   ("chunked", blocks, 1)):
-        disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=True))
-        base = now_us()
-        disp.submit(
-            mb.WorkDescriptor(opcode=0, arg0=arg0, request_id=LO_BASE,
-                              deadline_us=base + 60_000_000,
-                              n_chunks=n_chunks),
-            admission=False)
-        # the HIGH request "arrives" the instant the LOW item starts; on
-        # a synchronous backend the host is UNRESPONSIVE inside kick()
-        # until the triggered step completes, so the arrival-to-trigger
-        # wait is (time the host was stuck in kick) + (queueing delay
-        # before the HIGH trigger) — atomic, that is the LOW item's whole
-        # WCET; chunked, one chunk plus the preemption-point turnaround
-        t0 = now_us()
-        disp.kick(0)        # LOW's first step (atomic: ALL its work)
-        t_sub = now_us()
-        t_hi = disp.submit(
-            mb.WorkDescriptor(opcode=1, arg0=1, request_id=HI_BASE,
-                              deadline_us=now_us() + 1_000),
-            admission=False)
-        disp.drain()
-        out[label] = float((t_sub - t0) + t_hi.completion.queued_us)
-        out[f"{label}_preemptions"] = disp.preemptions
+        tc = TraceCollector()
+        hist = LogHistogram()
+        preemptions = 0
+        for p in range(probes):
+            disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=True),
+                              telemetry=tc)
+            disp.submit(
+                mb.WorkDescriptor(opcode=0, arg0=arg0,
+                                  request_id=LO_BASE + p,
+                                  deadline_us=now_us() + 60_000_000,
+                                  n_chunks=n_chunks),
+                admission=False)
+            disp.kick(0)    # LOW's first step (atomic: ALL its work)
+            disp.submit(
+                mb.WorkDescriptor(opcode=1, arg0=1,
+                                  request_id=HI_BASE + p,
+                                  deadline_us=now_us() + 1_000),
+                admission=False)
+            disp.drain()
+            preemptions += disp.preemptions
+            lo_trig = tc.events_of(EV_TRIGGER, LO_BASE + p)[0].t_us
+            hi_trig = tc.events_of(EV_TRIGGER, HI_BASE + p)[0].t_us
+            hist.record(max(float(hi_trig - lo_trig), 0.0))
+        out[label] = hist.summary()
+        out[f"{label}_preemptions"] = preemptions
     rt.dispose()
     return out
 
@@ -236,25 +256,37 @@ def _run_preempt_arm(smoke: bool) -> list[str]:
     """HIGH time-to-first-trigger under one long LOW step: atomic waits
     out the LOW item's whole WCET, chunked is bounded by one chunk. Like
     the other timing arms, retries a few times on shared-CPU noise and
-    reports the last attempt honestly if no clean separation appears."""
+    reports the last attempt honestly if no clean separation appears.
+    The headline rows report the collector-derived median; the
+    ``*_{p50,p95,p99}_us`` rows carry the full distribution."""
     blocks = 4 if smoke else 8
-    m = {}
+    probes = 2 if smoke else 5
+    m, at, ch = {}, {}, {}
     for attempt in range(3):
-        m = _run_preempt_arm_once(blocks)
+        m = _run_preempt_arm_once(blocks, probes)
+        at, ch = m["atomic"], m["chunked"]
         # a clean run shows the chunked wait well under the atomic one
         # and within a couple of chunk lengths
-        if m["chunked"] < m["atomic"] / 2 and \
-                m["chunked"] <= 3.0 * m["chunk_us"]:
+        if ch["p50_us"] < at["p50_us"] / 2 and \
+                ch["p50_us"] <= 3.0 * m["chunk_us"]:
             break
-    return [
-        f"dispatch_preempt_atomic_high_wait_us,{m['atomic']:.1f},"
-        f"blocks={blocks},chunk_us={m['chunk_us']:.0f}",
-        f"dispatch_preempt_chunked_high_wait_us,{m['chunked']:.1f},"
+    rows = [
+        f"dispatch_preempt_atomic_high_wait_us,{at['p50_us']:.1f},"
+        f"blocks={blocks},chunk_us={m['chunk_us']:.0f},probes={probes}",
+        f"dispatch_preempt_chunked_high_wait_us,{ch['p50_us']:.1f},"
         f"preemptions={m['chunked_preemptions']},"
-        f"bounded_by_one_chunk={m['chunked'] <= 3.0 * m['chunk_us']}",
-        f"dispatch_preempt_speedup,{m['atomic'] / max(m['chunked'], 1.0):.2f},"
-        f"atomic_us={m['atomic']:.0f},chunked_us={m['chunked']:.0f}",
+        f"bounded_by_one_chunk={ch['p50_us'] <= 3.0 * m['chunk_us']}",
+        f"dispatch_preempt_speedup,"
+        f"{at['p50_us'] / max(ch['p50_us'], 1.0):.2f},"
+        f"atomic_us={at['p50_us']:.0f},chunked_us={ch['p50_us']:.0f}",
     ]
+    for label, s in (("atomic", at), ("chunked", ch)):
+        for q in ("p50", "p95", "p99"):
+            rows.append(
+                f"dispatch_preempt_{label}_high_wait_{q}_us,"
+                f"{s[f'{q}_us']:.1f},n={s['count']},"
+                f"worst_us={s['worst_us']:.1f}")
+    return rows
 
 
 # ----------------------------------------------------------------------
@@ -410,8 +442,14 @@ def run(smoke: bool = False) -> list[str]:
                 f"max_depth={depth:.0f}")
     rows.append(f"dispatch_pipeline_speedup,{sync_us/max(pipe_us, 1.0):.2f},"
                 f"met={pipe_stats['met']},stragglers={pipe_stats['stragglers']}")
-    rows.append(f"dispatch_ticket_result_us,{_run_ticket_arm(pipe_items):.1f},"
+    ticket_us, ticket_dist = _run_ticket_arm(pipe_items)
+    rows.append(f"dispatch_ticket_result_us,{ticket_us:.1f},"
                 f"items={pipe_items},clusters={PIPE_CLUSTERS}")
+    for q in ("p50", "p95", "p99"):
+        rows.append(f"dispatch_ticket_response_{q}_us,"
+                    f"{ticket_dist[f'{q}_us']:.1f},"
+                    f"n={ticket_dist['count']},"
+                    f"worst_us={ticket_dist['worst_us']:.1f}")
     rows.extend(_run_policy_arm(smoke))
     rows.extend(_run_preempt_arm(smoke))
     return rows

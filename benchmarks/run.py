@@ -1,6 +1,9 @@
 # One function per paper table. Prints ``name,us_per_call,derived`` CSV and
-# writes the same rows as machine-readable JSON (default BENCH_3.json, or
-# the path given positionally) so the perf trajectory is tracked across PRs.
+# writes the same rows as machine-readable JSON so the perf trajectory is
+# tracked across PRs. The default output auto-numbers itself as
+# ``BENCH_<max existing + 1>.json`` (scanning the repo root), so a new PR's
+# run appends to the trajectory without hand-editing this file; pass a path
+# positionally to override.
 #
 #   bench_dispatch    -> paper Tables II (avg) & III (worst): LK vs
 #                        traditional phase costs, single-cluster & full,
@@ -19,13 +22,20 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import re
 import sys
 import traceback
 
 # repo root on sys.path so ``python benchmarks/run.py`` works from anywhere
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_ROOT))
 
-DEFAULT_JSON = "BENCH_4.json"
+
+def default_json_path() -> str:
+    """``BENCH_<max existing + 1>.json``: the trajectory numbers itself."""
+    nums = [int(m.group(1)) for p in _ROOT.glob("BENCH_*.json")
+            for m in (re.fullmatch(r"BENCH_(\d+)\.json", p.name),) if m]
+    return f"BENCH_{max(nums, default=0) + 1}.json"
 
 
 def _row_record(row: str) -> dict:
@@ -43,10 +53,16 @@ def _row_record(row: str) -> dict:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("json_path", nargs="?", default=DEFAULT_JSON)
+    ap.add_argument("json_path", nargs="?", default=None,
+                    help="output JSON (default: auto-numbered "
+                         "BENCH_<n+1>.json)")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI path: reduced reps, no JSON written")
+                    help="fast CI path: reduced reps; JSON written only "
+                         "when a path is given explicitly")
     args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    explicit_json = args.json_path is not None
+    if args.json_path is None:
+        args.json_path = default_json_path()
     from benchmarks import bench_dispatch, bench_kernels, bench_throughput
     print("name,us_per_call,derived")
     records = []
@@ -62,7 +78,7 @@ def main(argv=None) -> None:
             row = f"{mod.__name__},ERROR,{type(e).__name__}"
             print(row, flush=True)
             records.append(_row_record(row))
-    if args.smoke:
+    if args.smoke and not explicit_json:
         print(f"# smoke: {len(records)} rows, no JSON written",
               file=sys.stderr)
         if failures:   # CI signal: bench code rotted
@@ -73,6 +89,8 @@ def main(argv=None) -> None:
         f.write("\n")
     print(f"# wrote {len(records)} rows to {args.json_path}",
           file=sys.stderr)
+    if args.smoke and failures:   # CI signal: bench code rotted
+        sys.exit(1)
 
 
 if __name__ == "__main__":

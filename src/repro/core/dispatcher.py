@@ -68,15 +68,18 @@ from repro.core.sched import (
     make_policy,
 )
 from repro.core.sched import admission as sched_admission
+from repro.core.telemetry import (
+    EV_ADMIT, EV_CANCEL, EV_CHUNK_RETIRE, EV_FAIL, EV_PREEMPT, EV_REJECT,
+    EV_REQUEUE, EV_RESOLVE, EV_SHED, EV_SUBMIT, EV_TRIGGER, TraceCollector,
+)
+# one clock stamps the whole timeline: dispatcher-side events and
+# collector-default-stamped events (heal, rt_*) must never drift apart
+from repro.core.telemetry.events import now_us
 
 __all__ = [
     "AdmissionError", "AllClustersFailed", "Completion", "Dispatcher",
     "NO_DEADLINE", "Ticket", "TicketCancelled", "now_us",
 ]
-
-
-def now_us() -> int:
-    return time.perf_counter_ns() // 1000
 
 
 class AllClustersFailed(RuntimeError):
@@ -235,7 +238,9 @@ class Dispatcher:
                  default_wcet_us: float = 1000.0,
                  wcet_sigma: float = 1.0,
                  clock: Optional[Callable[[], int]] = None,
-                 preemptive: Optional[bool] = None):
+                 preemptive: Optional[bool] = None,
+                 telemetry: Optional[TraceCollector] = None,
+                 wcet_quantile: Optional[float] = None):
         for rt in runtimes.values():
             _require_runtime(rt)
         self.runtimes = dict(runtimes)
@@ -265,6 +270,12 @@ class Dispatcher:
         # (a silent magic constant is how admission lies to you)
         self.default_wcet_us = float(default_wcet_us)
         self.wcet_sigma = float(wcet_sigma)
+        # percentile-WCET estimator: when set, observed estimates are the
+        # window's q-quantile instead of worst + σ·jitter (soft real-time
+        # admission — trade the absolute worst for a stated percentile)
+        if wcet_quantile is not None and not 0.0 < wcet_quantile <= 1.0:
+            raise ValueError("wcet_quantile must be in (0, 1]")
+        self.wcet_quantile = wcet_quantile
         # inflated estimate per opcode, invalidated when a retirement
         # adds an observation — admission sums estimates over whole
         # queues, so recomputing the window statistic per item is O(n·w)
@@ -303,6 +314,12 @@ class Dispatcher:
         # deferred exception to keep retiring work, so the error is kept
         # here for the operator (pump() callers still see it re-raised)
         self.failure_callback_errors: list[BaseException] = []
+        # telemetry: structured event timeline + latency histograms +
+        # runtime verification; every emission is gated on attachment so
+        # an untraced dispatcher pays nothing
+        self.telemetry: Optional[TraceCollector] = None
+        if telemetry is not None:
+            self.attach_telemetry(telemetry)
 
     # ------------------------------------------------------------------
     @property
@@ -315,6 +332,50 @@ class Dispatcher:
         """Declare one opcode's scheduling parameters (priority, budget,
         criticality) to the active policy."""
         self.policy.set_class(spec)
+        if self.telemetry is not None:
+            self.telemetry.set_name(spec.opcode, spec.name)
+
+    # ------------------------------------------------------------------
+    def attach_telemetry(self, telemetry: TraceCollector) -> None:
+        """Attach a trace collector: events, histograms, and the
+        runtime-verification monitor all flow into it from here on, and
+        the dispatcher's counters join its unified ``counters()``
+        surface. One collector per dispatcher (idempotent re-attach)."""
+        if self.telemetry is telemetry:
+            return
+        if self.telemetry is not None:
+            raise RuntimeError("a TraceCollector is already attached")
+        self.telemetry = telemetry
+        telemetry.register_source("dispatcher", self._counter_snapshot)
+        for spec in self.policy.specs():
+            telemetry.set_name(spec.opcode, spec.name)
+
+    def _counter_snapshot(self) -> dict:
+        """The dispatcher's scattered warn-once/error counters as one
+        dict — the ``counters()`` source (and the audit surface: every
+        counter here also appears in ``deadline_stats()``)."""
+        return {
+            "completed": self._n_completed,
+            "met": self._n_met,
+            "rejected": self.rejected,
+            "cancelled": self.cancelled_total,
+            "shed": self.shed_total,
+            "preemptions": self.preemptions,
+            "chunks": self.chunks_total,
+            "stragglers": self._n_stragglers,
+            "ack_mismatches": self.mailbox.ack_mismatches,
+            "chunk_protocol_errors": self.chunk_protocol_errors,
+            "failure_callback_errors": len(self.failure_callback_errors),
+        }
+
+    def counters(self) -> dict:
+        """Unified counter surface: with telemetry attached, the
+        collector's merged view (events + monitor + every registered
+        source); without, this dispatcher's own snapshot."""
+        if self.telemetry is not None:
+            return self.telemetry.counters()
+        return {f"dispatcher.{k}": v
+                for k, v in self._counter_snapshot().items()}
 
     def register(self, cluster: int, runtime: PersistentRuntime) -> None:
         """Attach a runtime as a new cluster (shared-dispatcher clients)."""
@@ -370,17 +431,28 @@ class Dispatcher:
         stay O(1) each; the item itself is discarded when it surfaces)."""
         if ticket.cluster in self.runtimes:
             self.policy.note_cancelled(ticket.cluster, ticket)
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_CANCEL, t_us=self._clock(), cluster=ticket.cluster,
+                request_id=ticket.request_id, opcode=ticket.desc.opcode)
+            self.telemetry.monitor.note_withdrawn(ticket.request_id)
 
     def _inflated_estimate(self, opcode: int, obs_map: dict,
                            cache: dict) -> Optional[float]:
-        """Memoized ``worst + wcet_sigma·σ`` over one observation stream
-        (whole-item or per-chunk); None when nothing was observed yet."""
+        """Memoized estimate over one observation stream (whole-item or
+        per-chunk): ``worst + wcet_sigma·σ`` by default, or the window's
+        ``wcet_quantile`` percentile when that estimator is selected;
+        None when nothing was observed yet."""
         obs = obs_map.get(opcode)
         if not obs:
             return None
         cached = cache.get(opcode)
         if cached is None:
-            cached = sched_admission.inflated_wcet(obs, self.wcet_sigma)
+            if self.wcet_quantile is not None:
+                cached = sched_admission.quantile_wcet(
+                    obs, self.wcet_quantile)
+            else:
+                cached = sched_admission.inflated_wcet(obs, self.wcet_sigma)
             cache[opcode] = cached
         return cached
 
@@ -456,13 +528,21 @@ class Dispatcher:
         if cluster not in self.runtimes:
             raise KeyError(cluster)
 
+        admitted = False
         if admission and desc.deadline_us:
             try:
                 self._admit(cluster, desc)
-            except AdmissionError:
+                admitted = True
+            except AdmissionError as e:
                 if not self._shed_to_admit(cluster, desc):
                     self.rejected += 1
+                    if self.telemetry is not None:
+                        self.telemetry.emit(
+                            EV_REJECT, t_us=self._clock(), cluster=cluster,
+                            request_id=desc.request_id, opcode=desc.opcode,
+                            test=e.test, term=e.term, bound=e.bound)
                     raise
+                admitted = True
         ticket = Ticket(self, desc, cluster)
         spec = self.policy.spec(desc.opcode)
         ticket.priority = self.policy.priority_of(desc.opcode)
@@ -472,6 +552,27 @@ class Dispatcher:
                          seq=next(self._seq), desc=desc,
                          submitted_us=self._clock(), ticket=ticket)
         self.policy.enqueue(cluster, item)
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_SUBMIT, t_us=item.submitted_us, cluster=cluster,
+                request_id=desc.request_id, opcode=desc.opcode,
+                chunk=desc.chunk, deadline_us=desc.deadline_us,
+                n_chunks=desc.n_chunks, admitted=admitted)
+            if admitted:
+                self.telemetry.emit(
+                    EV_ADMIT, t_us=item.submitted_us, cluster=cluster,
+                    request_id=desc.request_id, opcode=desc.opcode,
+                    deadline_us=desc.deadline_us)
+            # the monitor's promise record: an admitted item's response
+            # time is BOUND by its deadline (every analysis passes only
+            # when R ≤ D); est is what admission charged — already
+            # computed inside _admit, so re-reading it triggers no
+            # default-WCET warning
+            self.telemetry.monitor.note_submit(
+                request_id=desc.request_id, opcode=desc.opcode,
+                deadline_us=desc.deadline_us, admitted=admitted,
+                est_us=self._estimate_us(desc.opcode) if admitted else None,
+                t_us=item.submitted_us)
         return ticket
 
     def _admit(self, cluster: int, desc: mb.WorkDescriptor,
@@ -523,6 +624,12 @@ class Dispatcher:
                 shed = trial
             for victim in shed:       # dry run passed: cancel for real
                 victim.ticket.cancel()
+                if self.telemetry is not None:
+                    self.telemetry.emit(
+                        EV_SHED, t_us=self._clock(), cluster=cluster,
+                        request_id=victim.desc.request_id,
+                        opcode=victim.desc.opcode,
+                        for_request=desc.request_id)
             self.shed_total += len(shed)
             return True
         return False
@@ -570,6 +677,11 @@ class Dispatcher:
             self._fail_cluster(cluster)
             raise
         self._inflight[cluster].append((item, t_trig))
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_TRIGGER, t_us=t_trig, cluster=cluster,
+                request_id=item.desc.request_id, opcode=item.desc.opcode,
+                chunk=item.desc.chunk)
         assert self.mailbox.depth(cluster) == \
             len(self._inflight[cluster]), \
             "mailbox / dispatcher in-flight records desynced"
@@ -647,6 +759,14 @@ class Dispatcher:
         self.policy.on_retire(cluster, item, service, end)
         if not done:
             self.chunks_total += 1
+            if self.telemetry is not None:
+                self.telemetry.emit(
+                    EV_CHUNK_RETIRE, t_us=end, cluster=cluster,
+                    request_id=item.desc.request_id,
+                    opcode=item.desc.opcode, chunk=item.desc.chunk,
+                    start_us=start, dur_us=service)
+                self.telemetry.observe("chunk_us", item.desc.opcode,
+                                       service)
             remainder = QueueItem(
                 deadline_us=item.deadline_us, seq=item.seq,
                 desc=item.desc.advance(), submitted_us=item.submitted_us,
@@ -658,6 +778,12 @@ class Dispatcher:
                 # where the running item stood once the urgent work ran)
                 self.preemptions += 1
                 self.policy.enqueue(cluster, remainder)
+                if self.telemetry is not None:
+                    self.telemetry.emit(
+                        EV_PREEMPT, t_us=end, cluster=cluster,
+                        request_id=item.desc.request_id,
+                        opcode=item.desc.opcode,
+                        chunk=remainder.desc.chunk)
             else:
                 self._trigger_item(cluster, remainder)
             return None
@@ -678,6 +804,24 @@ class Dispatcher:
         self._service_sum_us += item.service_accum_us
         self._service_worst_us = max(self._service_worst_us,
                                      item.service_accum_us)
+        if self.telemetry is not None:
+            op = item.desc.opcode
+            self.telemetry.emit(
+                EV_RESOLVE, t_us=end, cluster=cluster,
+                request_id=comp.request_id, opcode=op,
+                chunk=item.desc.chunk, start_us=start, dur_us=service,
+                met_deadline=comp.met_deadline, chunks=comp.chunks,
+                service_us=comp.service_us, queued_us=comp.queued_us)
+            # the three distribution views of one completion: device
+            # occupancy, queueing delay, and end-to-end response
+            self.telemetry.observe("service_us", op, item.service_accum_us)
+            self.telemetry.observe("queue_us", op, comp.queued_us)
+            self.telemetry.observe("response_us", op,
+                                   end - item.submitted_us)
+            self.telemetry.monitor.note_resolve(
+                request_id=comp.request_id, opcode=op, cluster=cluster,
+                end_us=end, deadline_us=item.desc.deadline_us,
+                service_us=item.service_accum_us)
         if item.ticket is not None:
             item.ticket._resolve(comp)
         return comp
@@ -694,6 +838,10 @@ class Dispatcher:
         inflight_descs = self.mailbox.pending(cluster)
         inflight_meta = list(self._inflight.pop(cluster, ()))
         queued = self.policy.drop_cluster(cluster)
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_FAIL, t_us=self._clock(), cluster=cluster,
+                queued=len(queued), inflight=len(inflight_descs))
         del self.runtimes[cluster]
         self._last_retire_us.pop(cluster, None)
         self._draining.discard(cluster)
@@ -735,6 +883,11 @@ class Dispatcher:
             self.policy.enqueue(tgt, it)
             if it.ticket is not None:
                 it.ticket.cluster = tgt
+            if self.telemetry is not None:
+                self.telemetry.emit(
+                    EV_REQUEUE, t_us=self._clock(), cluster=tgt,
+                    request_id=it.desc.request_id, opcode=it.desc.opcode,
+                    chunk=it.desc.chunk, from_cluster=cluster)
         if cb_exc is not None:
             raise cb_exc
 
@@ -897,4 +1050,8 @@ class Dispatcher:
             "stragglers": self._n_stragglers,
             "window": len(self.completions),
             "failure_callback_errors": len(self.failure_callback_errors),
+            # previously only greppable from logs / buried attributes:
+            # protocol discrepancies the operator must see in one place
+            "ack_mismatches": self.mailbox.ack_mismatches,
+            "chunk_protocol_errors": self.chunk_protocol_errors,
         }

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mailbox as mb
+from repro.core.telemetry import EV_RT_RETIRE, EV_RT_TRIGGER, TraceCollector
 from repro.core.wcet import WcetTracker
 
 
@@ -124,7 +125,8 @@ class PersistentRuntime:
                  mesh=None,
                  state_shardings=None,
                  donate: bool = True,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2,
+                 telemetry: Optional[TraceCollector] = None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
         self.work_names = [entry[0] for entry in work_fns]
@@ -144,6 +146,12 @@ class PersistentRuntime:
         self._compiled = None
         self.status = mb.THREAD_INIT
         self.steps = 0
+        # runtime-level telemetry: step enqueue/retire instants with the
+        # in-flight depth — the device-facing view of the same timeline
+        # the dispatcher annotates with scheduling decisions. The cluster
+        # id is assigned by whoever registers this runtime (LkSystem).
+        self.telemetry = telemetry
+        self.telemetry_cluster = -1
 
     # ------------------------------------------------------------------
     def _lk_step(self, state, carries, desc):
@@ -236,6 +244,13 @@ class PersistentRuntime:
             self._carries = new_carries
             self._inflight.append((result, from_gpu))
         self.tracker.record_depth(len(self._inflight))
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_RT_TRIGGER, cluster=self.telemetry_cluster,
+                request_id=int(np.asarray(desc)[mb.W_REQID]),
+                opcode=int(np.asarray(desc)[mb.W_OPCODE]),
+                chunk=int(np.asarray(desc)[mb.W_CHUNK]),
+                depth=len(self._inflight))
         self.status = mb.THREAD_WORKING
         self.steps += 1
 
@@ -255,6 +270,13 @@ class PersistentRuntime:
             from_gpu = np.asarray(from_gpu)
         self.status = (mb.THREAD_WORKING if self._inflight
                        else int(from_gpu[mb.W_STATUS]))
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_RT_RETIRE, cluster=self.telemetry_cluster,
+                request_id=int(from_gpu[mb.W_REQID]),
+                chunk=int(from_gpu[mb.W_CHUNK]),
+                status=int(from_gpu[mb.W_STATUS]),
+                depth=len(self._inflight))
         return result, from_gpu
 
     def poll(self):

@@ -26,8 +26,8 @@ import math
 from typing import Optional, Sequence
 
 __all__ = [
-    "AdmissionError", "inflated_wcet", "backlog_demand_us",
-    "remaining_us", "chunk_blocking_us",
+    "AdmissionError", "inflated_wcet", "quantile_wcet",
+    "backlog_demand_us", "remaining_us", "chunk_blocking_us",
     "edf_demand_test", "liu_layland_bound", "utilization_test",
     "response_time", "server_supply_us",
 ]
@@ -61,6 +61,23 @@ def inflated_wcet(observed: Sequence[float], sigma_factor: float) -> float:
     mean = sum(observed) / n
     var = max(sum(v * v for v in observed) / n - mean * mean, 0.0)
     return float(worst + sigma_factor * math.sqrt(var))
+
+
+def quantile_wcet(observed: Sequence[float], q: float) -> float:
+    """Percentile WCET estimator: the empirical q-quantile of the
+    observation window (``Dispatcher(wcet_quantile=q)``). The soft
+    real-time alternative to :func:`inflated_wcet` — instead of charging
+    worst + k·σ (which one straggler inflates forever, over-rejecting),
+    admission charges the stated percentile and the telemetry monitor's
+    bound-violation ledger reports how often reality exceeded it.
+    ``q=1`` recovers the plain observed worst; quantiles use the ceiling
+    rank, so the estimate is always an actually-observed value."""
+    if not observed:
+        raise ValueError("quantile_wcet needs at least one observation")
+    q = min(max(q, 0.0), 1.0)
+    xs = sorted(observed)
+    rank = max(1, math.ceil(q * len(xs)))
+    return float(xs[rank - 1])
 
 
 def remaining_us(desc, estimate, chunk_estimate=None) -> float:

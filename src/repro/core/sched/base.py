@@ -225,6 +225,10 @@ class SchedPolicy(abc.ABC):
     def spec(self, opcode: int) -> Optional[ClassSpec]:
         return self._specs.get(opcode)
 
+    def specs(self) -> tuple[ClassSpec, ...]:
+        """Every declared class spec (telemetry naming, diagnostics)."""
+        return tuple(self._specs.values())
+
     def criticality_of(self, opcode: int) -> str:
         s = self._specs.get(opcode)
         return s.criticality if s is not None else CRIT_LOW

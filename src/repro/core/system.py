@@ -43,6 +43,7 @@ from repro.core.clusters import Cluster, ClusterManager
 from repro.core.dispatcher import Dispatcher, Ticket
 from repro.core.persistent import PersistentRuntime, RuntimeProtocol
 from repro.core.sched import CRIT_LOW, ClassSpec, SchedPolicy
+from repro.core.telemetry import EV_HEAL, TraceCollector
 
 
 @dataclass(frozen=True)
@@ -121,7 +122,9 @@ class LkSystem:
                  heal: bool = True,
                  policy: Union[str, SchedPolicy] = "edf",
                  default_wcet_us: float = 1000.0,
-                 preemptive: Optional[bool] = None):
+                 preemptive: Optional[bool] = None,
+                 telemetry: Optional[TraceCollector] = None,
+                 wcet_quantile: Optional[float] = None):
         self.cm = cluster_manager if cluster_manager is not None else \
             ClusterManager(devices=devices, n_clusters=n_clusters,
                            axis_names=axis_names,
@@ -138,6 +141,11 @@ class LkSystem:
         self._policy = policy
         self._preemptive = preemptive
         self._default_wcet_us = float(default_wcet_us)
+        # one collector serves the whole system: dispatcher decisions,
+        # per-runtime step instants, and the heal loop's fail→heal pairs
+        # all land on the same timeline (see repro.core.telemetry)
+        self.telemetry = telemetry
+        self._wcet_quantile = wcet_quantile
         self._classes: dict[str, WorkClass] = {}
         self._opcodes: dict[str, int] = {}
         self.dispatcher: Optional[Dispatcher] = None
@@ -212,6 +220,8 @@ class LkSystem:
             policy=self._policy, classes=specs,
             default_wcet_us=self._default_wcet_us,
             preemptive=self._preemptive,
+            telemetry=self.telemetry,
+            wcet_quantile=self._wcet_quantile,
             on_failure=self._on_cluster_failure if self._heal else None)
         for cl in self.cm.healthy_clusters():
             self._add_cluster(cl)
@@ -339,6 +349,11 @@ class LkSystem:
             self._lame_ducks.add(duck)
             self.dispatcher.quiesce(duck)     # drain, don't feed
         self._repin()
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_HEAL, cluster=did, generation=self.cm.generation,
+                clusters=len(self.cluster_ids()),
+                lame_ducks=len(self._lame_ducks), heals=self.heals)
 
     def reap(self) -> list[int]:
         """Unregister + dispose lame-duck clusters whose backlog drained;
@@ -370,6 +385,10 @@ class LkSystem:
         did = next(self._next_dispatch_id)
         rt = self._make_runtime(cl)
         self.dispatcher.register(did, rt)
+        if self.telemetry is not None and hasattr(rt, "telemetry_cluster"):
+            # runtime-level events carry the dispatcher cluster id so the
+            # rt_* instants line up with the dispatcher's spans
+            rt.telemetry_cluster = did
         self._runtimes[did] = rt
         self._cluster_of[did] = cl
         return did
@@ -385,7 +404,8 @@ class LkSystem:
             result_template=self._result_template,
             mesh=cl.mesh if shardings is not None else None,
             state_shardings=shardings,
-            max_inflight=self._max_inflight)
+            max_inflight=self._max_inflight,
+            telemetry=self.telemetry)
         rt.boot(self._state_factory(cl))
         return rt
 

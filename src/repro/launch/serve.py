@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import wcet
+from repro.core.telemetry import TraceCollector
 from repro.core.wcet import WcetTracker
 from repro.distributed import ShardCtx
 from repro.models import build
@@ -49,6 +50,11 @@ def main(argv=None):
                     help="disable chunk-boundary preemption (chunks of "
                          "one item run back to back — the pre-chunking "
                          "dispatch order)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="attach the telemetry collector and export a "
+                         "Chrome/Perfetto trace JSON of the run to PATH "
+                         "(also prints the per-opcode latency quantiles "
+                         "and the runtime-verification ledger)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -58,12 +64,14 @@ def main(argv=None):
     params = model.init(jax.random.key(args.seed))
 
     tracker = WcetTracker("serve")
+    collector = TraceCollector() if args.trace else None
     engine = ServingEngine(model, params, max_batch=args.max_batch,
                            max_seq=args.max_seq, tracker=tracker,
                            completion_window=args.completion_window,
                            policy=args.policy,
                            chunked_prefill=args.chunked_prefill,
-                           prefill_chunk_tokens=args.prefill_chunk)
+                           prefill_chunk_tokens=args.prefill_chunk,
+                           telemetry=collector)
     if args.no_preempt:
         engine.dispatcher.policy.preemptive = False
     rng = np.random.default_rng(args.seed)
@@ -101,6 +109,16 @@ def main(argv=None):
           f"rejected={ds.get('rejected', 0)} "
           f"stragglers={ds.get('stragglers', 0)} "
           f"window={ds.get('window', 0)}/{engine.dispatcher.completion_window}")
+    if collector is not None:
+        for line in collector.format_table("response_us"):
+            print(f"[serve] {line}")
+        mc = collector.monitor.counts()
+        print(f"[serve] runtime verification: checked={mc['checked']} "
+              f"bound_violations={mc['bound_violations']} "
+              f"deadline_misses={mc['deadline_misses']} "
+              f"wcet_overruns={mc['wcet_overruns']}")
+        n_ev = collector.export_chrome(args.trace)
+        print(f"[serve] wrote {n_ev} trace events to {args.trace}")
     engine.dispose()
     return outs
 

@@ -1,0 +1,203 @@
+"""Traced-workload CLI: run a synthetic persistent-dispatch workload with
+the telemetry subsystem attached, export the timeline, and VERIFY it.
+
+    PYTHONPATH=src python -m repro.launch.trace --out trace.json
+
+Two phases, both on one dispatcher + TraceCollector:
+
+1. **Preemption timeline** — one long LOW item sliced into resumable
+   chunks, a HIGH arrival mid-item. The exported Chrome/Perfetto trace
+   must reconstruct PR 4's headline picture: the HIGH ticket's trigger
+   lands BETWEEN two of the LOW ticket's chunk retirements (verified
+   from the collector's events before the trace is written).
+2. **Admitted workload** — hi/lo items submitted with real deadlines
+   through admission control. The runtime-verification monitor replays
+   every completion against the admission analysis' response-time bound;
+   an admitted workload must finish with ZERO bound violations.
+
+Exit status is non-zero when either check fails (CI runs this as the
+traced smoke workload), unless ``--no-check``. ``--csv`` additionally
+writes the flat per-event CSV; ``--wcet-quantile`` switches admission to
+the percentile-WCET estimator.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mailbox as mb
+from repro.core.dispatcher import Dispatcher, now_us
+from repro.core.sched import ClassSpec, CRIT_HIGH, CRIT_LOW, make_policy
+from repro.core.telemetry import (
+    EV_CHUNK_RETIRE, EV_TRIGGER, TraceCollector,
+)
+
+LO_ID, HI_BASE = 1, 100
+
+
+def _lo_fn(state, carry, desc):
+    # one block of heavy matmuls per chunk; arg0 scales the block count
+    def block(_, x):
+        for _ in range(4):
+            x = jnp.tanh(x @ state["lo_w"])
+        return x
+    x = jax.lax.fori_loop(0, desc[mb.W_ARG0], block, state["lo_x"])
+    done = desc[mb.W_CHUNK] + 1 >= desc[mb.W_NCHUNKS]
+    return dict(state, lo_x=x), carry, x.sum()[None], done
+
+
+def _hi_fn(state, desc):
+    x = jnp.tanh(state["hi_x"] @ state["hi_w"])
+    return dict(state, hi_x=x), x.sum()[None]
+
+
+def _make_state(lo_dim: int):
+    rng = np.random.default_rng(0)
+    return {
+        "hi_w": jnp.asarray(rng.normal(size=(64, 64)) * 0.05, jnp.float32),
+        "hi_x": jnp.asarray(rng.normal(size=(4, 64)), jnp.float32),
+        "lo_w": jnp.asarray(rng.normal(size=(lo_dim, lo_dim)) * 0.05,
+                            jnp.float32),
+        "lo_x": jnp.asarray(rng.normal(size=(32, lo_dim)), jnp.float32),
+    }
+
+
+def _calibrate_us(rt, opcode: int, reps: int = 3) -> float:
+    import time
+    worst = 0.0
+    for i in range(reps):
+        t0 = time.perf_counter_ns()
+        rt.run_sync(mb.WorkDescriptor(opcode=opcode, arg0=1,
+                                      request_id=900 + i))
+        worst = max(worst, (time.perf_counter_ns() - t0) / 1e3)
+    return worst
+
+
+def _verify_timeline(tc: TraceCollector, hi_id: int) -> bool:
+    """Does the HIGH ticket's first trigger land between two LOW chunk
+    retirements? (The preemption picture, read back from the events.)"""
+    lo_chunks = [e.t_us for e in tc.events_of(EV_CHUNK_RETIRE, LO_ID)]
+    hi_trigs = [e.t_us for e in tc.events_of(EV_TRIGGER, hi_id)]
+    if not lo_chunks or not hi_trigs:
+        return False
+    t_hi = hi_trigs[0]
+    return any(c <= t_hi for c in lo_chunks) and \
+        any(c > t_hi for c in lo_chunks)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="trace.json",
+                    help="Chrome/Perfetto trace JSON path")
+    ap.add_argument("--csv", default=None,
+                    help="also write the flat per-event CSV here")
+    ap.add_argument("--policy", choices=("edf", "fp"), default="edf",
+                    help="scheduling policy for both phases")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced work sizes (CI fast path)")
+    ap.add_argument("--chunks", type=int, default=None,
+                    help="chunks of the long LOW item (default 6, smoke 4)")
+    ap.add_argument("--items", type=int, default=None,
+                    help="admitted-phase items (default 12, smoke 6)")
+    ap.add_argument("--wcet-quantile", type=float, default=None,
+                    help="use the percentile-WCET admission estimator "
+                         "instead of worst + sigma inflation")
+    ap.add_argument("--no-check", action="store_true",
+                    help="report but do not fail on verification errors")
+    args = ap.parse_args(argv)
+    n_chunks = args.chunks or (4 if args.smoke else 6)
+    n_items = args.items or (6 if args.smoke else 12)
+    lo_dim = 128 if args.smoke else 384
+
+    from repro.core.persistent import PersistentRuntime
+    rt = PersistentRuntime(
+        [("lo", _lo_fn, jnp.zeros((), jnp.int32)), ("hi", _hi_fn)],
+        result_template=jnp.zeros((1,), jnp.float32), max_inflight=1)
+    rt.boot(_make_state(lo_dim))
+    for op in (0, 1):          # compile both branches out of the timing
+        rt.run_sync(mb.WorkDescriptor(opcode=op, arg0=1, request_id=990))
+    chunk_us = _calibrate_us(rt, 0)
+    hi_us = _calibrate_us(rt, 1)
+
+    tc = TraceCollector()
+    classes = (
+        ClassSpec(0, "lo", priority=5, criticality=CRIT_LOW,
+                  chunk_us=chunk_us * 2),
+        ClassSpec(1, "hi", priority=0, criticality=CRIT_HIGH),
+    )
+    disp = Dispatcher(
+        {0: rt}, policy=make_policy(args.policy, preemptive=True),
+        classes=classes, telemetry=tc,
+        wcet_us={0: chunk_us * n_chunks * 2, 1: hi_us * 2},
+        wcet_quantile=args.wcet_quantile)
+    rt.telemetry = tc            # runtime-level instants on the same ring
+
+    # -- phase 1: the preemption timeline -------------------------------
+    print(f"[trace] phase 1: LOW x{n_chunks} chunks "
+          f"(~{chunk_us:.0f}us each) + mid-item HIGH arrival "
+          f"({args.policy}, preemptive)")
+    disp.submit(
+        mb.WorkDescriptor(opcode=0, arg0=1, request_id=LO_ID,
+                          deadline_us=now_us() + 60_000_000,
+                          n_chunks=n_chunks), admission=False)
+    disp.kick(0)                 # LOW's first chunk enters flight
+    hi = disp.submit(
+        mb.WorkDescriptor(opcode=1, request_id=HI_BASE,
+                          deadline_us=now_us() + 1_000_000),
+        admission=False)
+    disp.drain()
+    timeline_ok = _verify_timeline(tc, HI_BASE)
+    print(f"[trace]   HIGH trigger between LOW chunk retirements: "
+          f"{timeline_ok} (preemptions={disp.preemptions}, "
+          f"hi_queued_us={hi.completion.queued_us})")
+
+    # -- phase 2: admitted workload, bounds checked online ---------------
+    print(f"[trace] phase 2: {n_items} admitted items "
+          f"(deadline slack ~50x worst case)")
+    slack = int((chunk_us * n_chunks + hi_us) * n_items * 50)
+    for i in range(n_items):
+        op = 1 if i % 2 == 0 else 0
+        disp.submit(mb.WorkDescriptor(
+            opcode=op, arg0=1, request_id=HI_BASE + 1 + i,
+            deadline_us=now_us() + slack))
+    disp.drain()
+    mc = tc.monitor.counts()
+    bounds_ok = mc["bound_violations"] == 0 and mc["admitted_checked"] > 0
+    print(f"[trace]   runtime verification: {mc['admitted_checked']} "
+          f"admitted completions checked, "
+          f"{mc['bound_violations']} bound violations, "
+          f"{mc['deadline_misses']} unpromised misses, "
+          f"{mc['wcet_overruns']} WCET overruns")
+
+    # -- report + export --------------------------------------------------
+    for line in tc.format_table("response_us"):
+        print(f"[trace] {line}")
+    n_ev = tc.export_chrome(args.out)
+    print(f"[trace] wrote {n_ev} trace events to {args.out} "
+          f"(load in chrome://tracing or ui.perfetto.dev)")
+    if args.csv:
+        n_rows = tc.export_csv(args.csv)
+        print(f"[trace] wrote {n_rows} event rows to {args.csv}")
+    for v in tc.monitor.ledger:
+        print(f"[trace] ledger: {v.kind} req={v.request_id} "
+              f"late={v.lateness_us:.0f}us {v.detail}")
+    rt.dispose()
+    if args.no_check:
+        return 0
+    if not timeline_ok:
+        print("[trace] FAIL: preemption timeline not reconstructed",
+              file=sys.stderr)
+        return 1
+    if not bounds_ok:
+        print("[trace] FAIL: admitted workload violated its response-time "
+              "bounds", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -49,6 +49,7 @@ from repro.core.dispatcher import Dispatcher
 from repro.core.persistent import PersistentRuntime
 from repro.core.sched import (CRIT_HIGH, CRIT_LOW, BudgetedServerPolicy,
                               ClassSpec, SchedPolicy)
+from repro.core.telemetry import EV_ENGINE, TraceCollector
 from repro.core.wcet import WcetTracker
 from repro.serving.kv_cache import SlotManager, insert_slot_caches
 
@@ -76,7 +77,13 @@ class ServingEngine:
                  decode_period_us: float = DECODE_PERIOD_US,
                  chunked_prefill: bool = False,
                  prefill_chunk_tokens: Optional[int] = None,
-                 prefill_chunk_us: Optional[float] = None):
+                 prefill_chunk_us: Optional[float] = None,
+                 telemetry: Optional[TraceCollector] = None):
+        if telemetry is not None and dispatcher is not None:
+            raise ValueError(
+                "telemetry configures the engine-owned dispatcher; attach "
+                "the collector to the shared Dispatcher instead "
+                "(dispatcher.attach_telemetry)")
         if completion_window is not None:
             if dispatcher is not None:
                 raise ValueError(
@@ -198,7 +205,10 @@ class ServingEngine:
         self.rt = PersistentRuntime(
             work_fns,
             result_template=jnp.zeros((max_batch,), jnp.int32),
-            tracker=self.tracker, max_inflight=max_inflight)
+            tracker=self.tracker, max_inflight=max_inflight,
+            telemetry=telemetry)
+        if telemetry is not None:
+            self.rt.telemetry_cluster = cluster_id
         self.rt.boot(state)
 
         # decode is HIGH-criticality and (under the server policy) runs in
@@ -228,7 +238,8 @@ class ServingEngine:
                 {cluster_id: self.rt},
                 completion_window=completion_window
                 if completion_window is not None else 1024,
-                policy=policy, classes=class_specs)
+                policy=policy, classes=class_specs,
+                telemetry=telemetry)
         else:
             # raises if cluster_id is taken — silently adopting another
             # engine's runtime would decode against the wrong state
@@ -304,6 +315,12 @@ class ServingEngine:
             request_id, L, min(L + max_new_tokens - 1, self.max_seq - 1))
         if slot is None:
             return None
+        tc = self.dispatcher.telemetry   # engine-owned or shared collector
+        if tc is not None:
+            tc.emit(EV_ENGINE, cluster=self.cluster, request_id=request_id,
+                    phase="add_request", slot=slot, prompt_tokens=L,
+                    path="chunked" if self.chunked_prefill and not extras
+                    else "host")
         if self.chunked_prefill and not extras:
             buf = np.zeros((self.max_seq,), np.int32)
             buf[:L] = prompt

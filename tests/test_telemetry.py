@@ -1,0 +1,432 @@
+"""Telemetry & runtime verification: histogram/quantile properties, the
+event ring, dispatcher wiring, the bound monitor, exporters, and the
+percentile-WCET admission estimator.
+
+The histogram properties the ISSUE names (merge preserves counts;
+quantiles are monotone in q and bracketed by best/worst) run as seeded
+pseudo-property loops so they execute everywhere — hypothesis is an
+optional dev extra in this repo.
+"""
+import json
+import random
+from collections import deque
+
+import numpy as np
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core.dispatcher import Dispatcher
+from repro.core.sched import ClassSpec, EdfPolicy
+from repro.core.sched.admission import quantile_wcet
+from repro.core.telemetry import (
+    BOUND_VIOLATION, EV_CANCEL, EV_CHUNK_RETIRE, EV_PREEMPT, EV_RESOLVE,
+    EV_SUBMIT, EV_TRIGGER, LogHistogram, TraceCollector, WCET_OVERRUN,
+)
+
+
+# ---------------------------------------------------------------------------
+# fakes (same doubles the dispatcher tests use)
+# ---------------------------------------------------------------------------
+class FakeClock:
+    def __init__(self, t: int = 1_000_000):
+        self.t = t
+
+    def __call__(self) -> int:
+        return self.t
+
+    def advance(self, us: int) -> None:
+        self.t += us
+
+
+class FakeRuntime:
+    """RuntimeProtocol double speaking the chunk protocol; optionally
+    advances an injected clock by a per-opcode service time."""
+
+    def __init__(self, clock=None, service_us=None, max_inflight=1):
+        self.max_inflight = max_inflight
+        self._clock = clock
+        self._service = dict(service_us or {})
+        self._q = deque()
+
+    def trigger(self, desc):
+        if len(self._q) >= self.max_inflight:
+            raise RuntimeError("pipeline full")
+        self._q.append(desc)
+
+    def ready(self):
+        return bool(self._q)
+
+    def wait(self):
+        desc = self._q.popleft()
+        if self._clock is not None:
+            self._clock.advance(self._service.get(desc.opcode, 10))
+        fg = np.zeros((mb.DESC_WIDTH,), np.int32)
+        done = desc.chunk + 1 >= desc.n_chunks
+        fg[mb.W_STATUS] = mb.THREAD_FINISHED if done else mb.THREAD_PREEMPTED
+        fg[mb.W_REQID] = desc.request_id
+        fg[mb.W_CHUNK] = desc.chunk
+        return desc.request_id, fg
+
+    def dispose(self):
+        self._q.clear()
+
+
+# ---------------------------------------------------------------------------
+# LogHistogram properties
+# ---------------------------------------------------------------------------
+def _random_samples(rng, n):
+    return [rng.uniform(0.0, 10.0 ** rng.randint(0, 6)) for _ in range(n)]
+
+
+def test_histogram_merge_preserves_counts():
+    for seed in range(20):
+        rng = random.Random(seed)
+        a, b = LogHistogram(), LogHistogram()
+        xs = _random_samples(rng, rng.randint(1, 200))
+        ys = _random_samples(rng, rng.randint(0, 200))
+        for x in xs:
+            a.record(x)
+        for y in ys:
+            b.record(y)
+        merged = LogHistogram()
+        for h in (a, b):
+            merged.merge(h)
+        assert merged.n == len(xs) + len(ys)
+        assert sum(merged.counts.values()) == merged.n
+        assert merged.total == pytest.approx(a.total + b.total)
+        both = xs + ys
+        assert merged.best == pytest.approx(min(both))
+        assert merged.worst == pytest.approx(max(both))
+
+
+def test_histogram_quantiles_monotone_and_bracketed():
+    qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0]
+    for seed in range(20):
+        rng = random.Random(100 + seed)
+        h = LogHistogram()
+        xs = _random_samples(rng, rng.randint(1, 300))
+        for x in xs:
+            h.record(x)
+        vals = [h.quantile(q) for q in qs]
+        for lo, hi in zip(vals, vals[1:]):
+            assert lo <= hi                      # monotone in q
+        for v in vals:
+            assert min(xs) <= v <= max(xs)       # bracketed by extremes
+        assert vals[0] == pytest.approx(min(xs))
+        assert vals[-1] == pytest.approx(max(xs))
+
+
+def test_histogram_quantile_accuracy_within_one_bucket():
+    """The reported quantile is within one bucket's relative width of the
+    exact order statistic (the log-spacing resolution contract)."""
+    rng = random.Random(7)
+    h = LogHistogram()
+    xs = sorted(rng.uniform(10.0, 10_000.0) for _ in range(500))
+    for x in xs:
+        h.record(x)
+    for q in (0.5, 0.95, 0.99):
+        exact = xs[max(0, int(np.ceil(q * len(xs))) - 1)]
+        assert h.quantile(q) == pytest.approx(exact, rel=h.growth - 1.0)
+
+
+def test_histogram_empty_and_validation():
+    h = LogHistogram()
+    assert h.quantile(0.99) == 0.0
+    assert h.summary()["count"] == 0
+    with pytest.raises(ValueError):
+        h.record(-1.0)
+    with pytest.raises(ValueError):
+        h.record(float("nan"))
+    with pytest.raises(ValueError):
+        LogHistogram(growth=1.0)
+    other = LogHistogram(growth=3.0)
+    with pytest.raises(ValueError):
+        h.merge(other)
+
+
+def test_quantile_wcet_estimator():
+    obs = [10.0, 20.0, 30.0, 40.0, 100.0]
+    assert quantile_wcet(obs, 1.0) == 100.0      # plain observed worst
+    assert quantile_wcet(obs, 0.8) == 40.0
+    assert quantile_wcet(obs, 0.5) == 30.0       # ceil-rank: 3rd of 5
+    # monotone in q
+    vals = [quantile_wcet(obs, q) for q in (0.1, 0.5, 0.9, 1.0)]
+    assert vals == sorted(vals)
+    with pytest.raises(ValueError):
+        quantile_wcet([], 0.9)
+
+
+# ---------------------------------------------------------------------------
+# TraceCollector: ring bound, counters, names
+# ---------------------------------------------------------------------------
+def test_ring_buffer_bounded_and_drop_counted():
+    tc = TraceCollector(capacity=4)
+    for i in range(10):
+        tc.emit("submit", request_id=i)
+    assert len(tc) == 4
+    assert tc.dropped_events == 6
+    assert [e.request_id for e in tc.events] == [6, 7, 8, 9]
+    assert tc.counters()["events.submit"] == 10   # exact despite drops
+
+
+def test_counters_merge_registered_sources():
+    tc = TraceCollector()
+    tc.register_source("alpha", lambda: {"x": 1})
+    tc.register_source("alpha", lambda: {"x": 2})   # distinct fn → suffix
+    c = tc.counters()
+    assert c["alpha.x"] == 1 and c["alpha2.x"] == 2
+    assert "dropped_events" in c and "monitor.checked" in c
+
+
+def test_collector_names_and_tables():
+    tc = TraceCollector()
+    tc.set_name(0, "decode")
+    tc.observe("response_us", 0, 120.0)
+    tc.observe("response_us", 1, 80.0)
+    q = tc.quantiles("response_us")
+    assert set(q) == {"decode", "op1"}
+    table = tc.format_table("response_us")
+    assert any("decode" in line for line in table)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher wiring: event lifecycle, histograms, spans
+# ---------------------------------------------------------------------------
+def test_dispatcher_emits_lifecycle_and_histograms():
+    clock = FakeClock()
+    tc = TraceCollector(clock=clock)
+    rt = FakeRuntime(clock, service_us={0: 250})
+    disp = Dispatcher({0: rt}, clock=clock, telemetry=tc,
+                      classes=(ClassSpec(0, "work"),))
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=5),
+                    admission=False)
+    disp.drain()
+    assert t.done()
+    kinds = [e.kind for e in tc.events]
+    assert kinds == [EV_SUBMIT, EV_TRIGGER, EV_RESOLVE]
+    resolve = tc.events_of(EV_RESOLVE, 5)[0]
+    assert resolve.extra["dur_us"] == 250
+    assert resolve.extra["met_deadline"] is True
+    assert tc.hist("response_us", 0).n == 1
+    assert tc.hist("service_us", 0).worst == 250
+    assert tc.name_of(0) == "work"
+
+
+def test_chunked_item_emits_spans_and_preempt():
+    clock = FakeClock()
+    tc = TraceCollector(clock=clock)
+    rt = FakeRuntime(clock, service_us={0: 100, 1: 20})
+    disp = Dispatcher({0: rt}, policy=EdfPolicy(preemptive=True),
+                      clock=clock, telemetry=tc)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                  deadline_us=clock() + 50_000,
+                                  n_chunks=3), admission=False)
+    disp.kick(0)                       # chunk 0 in flight
+    disp.submit(mb.WorkDescriptor(opcode=1, request_id=2,
+                                  deadline_us=clock() + 500),
+                admission=False)
+    disp.drain()
+    # chunk 0 retired → preempted by the tighter HIGH deadline → HIGH
+    # triggered → remaining LOW chunks; the HIGH trigger timestamp falls
+    # between LOW chunk retirements (the acceptance-criterion timeline)
+    lo_chunks = [e.t_us for e in tc.events_of(EV_CHUNK_RETIRE, 1)]
+    hi_trig = tc.events_of(EV_TRIGGER, 2)[0].t_us
+    assert len(lo_chunks) == 2         # chunks 0 and 1 (chunk 2 resolves)
+    assert any(c <= hi_trig for c in lo_chunks)
+    assert any(c > hi_trig for c in lo_chunks)
+    assert len(tc.events_of(EV_PREEMPT, 1)) == 1
+    assert tc.hist("chunk_us", 0).n == 2
+    resolve = tc.events_of(EV_RESOLVE, 1)[0]
+    assert resolve.extra["chunks"] == 3
+    assert resolve.extra["service_us"] == 300
+
+
+def test_cancel_and_shed_emit_events():
+    clock = FakeClock()
+    tc = TraceCollector(clock=clock)
+    rt = FakeRuntime(clock, max_inflight=1)
+    disp = Dispatcher({0: rt}, clock=clock, telemetry=tc)
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=9),
+                    admission=False)
+    assert t.cancel()
+    ev = tc.events_of(EV_CANCEL, 9)
+    assert len(ev) == 1
+    assert tc.monitor.pending == 0      # promise withdrawn with the work
+
+
+def test_untraced_dispatcher_unchanged():
+    """No collector attached → no emission path runs, stats identical."""
+    clock = FakeClock()
+    rt = FakeRuntime(clock, service_us={0: 100})
+    disp = Dispatcher({0: rt}, clock=clock)
+    assert disp.telemetry is None
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1), admission=False)
+    disp.drain()
+    stats = disp.deadline_stats()
+    assert stats["n"] == 1
+    # the audited counters are surfaced even without telemetry
+    assert stats["ack_mismatches"] == 0
+    assert stats["chunk_protocol_errors"] == 0
+    c = disp.counters()
+    assert c["dispatcher.completed"] == 1
+
+
+def test_attach_telemetry_once():
+    disp = Dispatcher({0: FakeRuntime()})
+    tc = TraceCollector()
+    disp.attach_telemetry(tc)
+    disp.attach_telemetry(tc)            # idempotent
+    with pytest.raises(RuntimeError):
+        disp.attach_telemetry(TraceCollector())
+
+
+# ---------------------------------------------------------------------------
+# runtime verification: the bound monitor
+# ---------------------------------------------------------------------------
+def test_admitted_workload_zero_violations():
+    """An admitted EDF workload that meets its deadlines produces a clean
+    ledger: every completion checked, zero bound violations."""
+    clock = FakeClock()
+    tc = TraceCollector(clock=clock)
+    rt = FakeRuntime(clock, service_us={0: 100})
+    disp = Dispatcher({0: rt}, clock=clock, telemetry=tc,
+                      wcet_us={0: 150.0})
+    for i in range(5):
+        disp.submit(mb.WorkDescriptor(opcode=0, request_id=i,
+                                      deadline_us=clock() + 100_000))
+    disp.drain()
+    mc = tc.monitor.counts()
+    assert mc["checked"] == 5
+    assert mc["admitted_checked"] == 5
+    assert mc["bound_violations"] == 0
+    assert mc["deadline_misses"] == 0
+    assert len(tc.monitor.ledger) == 0
+
+
+def test_bound_violation_recorded_with_alert():
+    """When reality breaks an admitted bound (the fake runtime runs 40x
+    past its seeded WCET), the monitor records BOTH the bound violation
+    and the WCET overrun that explains it, and fires the alert."""
+    clock = FakeClock()
+    tc = TraceCollector(clock=clock)
+    alerts = []
+    tc.monitor.on_violation(alerts.append)
+    rt = FakeRuntime(clock, service_us={0: 4_000})
+    disp = Dispatcher({0: rt}, clock=clock, telemetry=tc,
+                      wcet_us={0: 100.0})
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                  deadline_us=clock() + 1_000))
+    disp.drain()
+    mc = tc.monitor.counts()
+    assert mc["bound_violations"] == 1
+    assert mc["wcet_overruns"] == 1
+    kinds = {v.kind for v in tc.monitor.ledger}
+    assert kinds == {BOUND_VIOLATION, WCET_OVERRUN}
+    assert len(alerts) == 2
+    v = next(v for v in tc.monitor.ledger if v.kind == BOUND_VIOLATION)
+    assert v.lateness_us == pytest.approx(3_000)
+
+
+def test_unadmitted_miss_is_not_a_bound_violation():
+    clock = FakeClock()
+    tc = TraceCollector(clock=clock)
+    rt = FakeRuntime(clock, service_us={0: 4_000})
+    disp = Dispatcher({0: rt}, clock=clock, telemetry=tc)
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                  deadline_us=clock() + 1_000),
+                admission=False)
+    disp.drain()
+    mc = tc.monitor.counts()
+    assert mc["deadline_misses"] == 1
+    assert mc["bound_violations"] == 0   # no analysis promised anything
+
+
+def test_raising_alert_callback_is_captured():
+    clock = FakeClock()
+    tc = TraceCollector(clock=clock)
+
+    def bad_alert(v):
+        raise RuntimeError("pager down")
+
+    tc.monitor.on_violation(bad_alert)
+    rt = FakeRuntime(clock, service_us={0: 4_000})
+    disp = Dispatcher({0: rt}, clock=clock, telemetry=tc)
+    t = disp.submit(mb.WorkDescriptor(opcode=0, request_id=1,
+                                      deadline_us=clock() + 100),
+                    admission=False)
+    disp.drain()
+    assert t.done()                      # retirement never lost
+    assert len(tc.monitor.callback_errors) == 1
+
+
+# ---------------------------------------------------------------------------
+# percentile-WCET estimator feeding admission
+# ---------------------------------------------------------------------------
+def test_wcet_quantile_estimator_in_dispatcher():
+    clock = FakeClock()
+    services = iter([100, 100, 100, 100, 10_000, 100])
+    rt = FakeRuntime(clock)
+    rt._service = {}
+
+    class VarRuntime(FakeRuntime):
+        def wait(self):
+            desc = self._q.popleft()
+            self._clock.advance(next(services))
+            fg = np.zeros((mb.DESC_WIDTH,), np.int32)
+            fg[mb.W_STATUS] = mb.THREAD_FINISHED
+            fg[mb.W_REQID] = desc.request_id
+            return desc.request_id, fg
+
+    disp_q = Dispatcher({0: VarRuntime(clock)}, clock=clock,
+                        wcet_quantile=0.8)
+    for i in range(6):
+        disp_q.submit(mb.WorkDescriptor(opcode=0, request_id=i),
+                      admission=False)
+    disp_q.drain()
+    # observations: five 100s and one 10000 — the 0.8-quantile ignores
+    # the straggler, worst+sigma does not
+    assert disp_q._estimate_us(0) == 100.0
+    assert quantile_wcet([100.0] * 5 + [10_000.0], 1.0) == 10_000.0
+    with pytest.raises(ValueError):
+        Dispatcher({0: FakeRuntime()}, wcet_quantile=1.5)
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+def test_chrome_export_reconstructs_spans(tmp_path):
+    clock = FakeClock()
+    tc = TraceCollector(clock=clock)
+    rt = FakeRuntime(clock, service_us={0: 100})
+    disp = Dispatcher({0: rt}, clock=clock, telemetry=tc,
+                      classes=(ClassSpec(0, "work"),))
+    disp.submit(mb.WorkDescriptor(opcode=0, request_id=3, n_chunks=2),
+                admission=False)
+    disp.drain()
+    path = tmp_path / "trace.json"
+    n = tc.export_chrome(str(path))
+    doc = json.loads(path.read_text())
+    assert len(doc["traceEvents"]) == n
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) == 2               # chunk 0 + resolve span
+    for s in spans:
+        assert s["tid"] == 3 and s["pid"] == 0
+        assert s["dur"] >= 1.0
+        assert "work" in s["name"]
+    # spans are disjoint and ordered: chunk 0 ends before chunk 1 starts
+    spans.sort(key=lambda s: s["ts"])
+    assert spans[0]["ts"] + spans[0]["dur"] <= spans[1]["ts"]
+    metas = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert any(e["args"]["name"] == "ticket 3" for e in metas)
+
+
+def test_csv_export(tmp_path):
+    tc = TraceCollector()
+    tc.emit("submit", request_id=1, opcode=0, deadline_us=5)
+    tc.emit("fail", cluster=2)
+    path = tmp_path / "events.csv"
+    assert tc.export_csv(str(path)) == 2
+    lines = path.read_text().strip().splitlines()
+    assert lines[0].startswith("kind,t_us,cluster")
+    assert lines[1].split(",")[0] == "submit"
+    assert "deadline_us=5" in lines[1]

@@ -1,31 +1,48 @@
-"""WCET tracker: stats math, jitter (paper's avg-vs-worst gap)."""
+"""WCET tracker: stats math, jitter (paper's avg-vs-worst gap), and the
+QUEUE_DEPTH companion series (dimensionless pipeline-depth samples that
+must stay out of the time-phase views)."""
 import math
 import time
 
 import pytest
 
-pytest.importorskip("hypothesis", reason="dev extra: pip install -e .[dev]")
-from hypothesis import given, settings, strategies as st
-
+from repro.core import wcet
 from repro.core.wcet import PhaseStats, WcetTracker
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # dev extra: pip install -e .[dev]
+    HAVE_HYPOTHESIS = False
 
-@given(st.lists(st.floats(1.0, 1e9), min_size=1, max_size=100))
-@settings(max_examples=100, deadline=None)
-def test_phase_stats_properties(samples):
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.floats(1.0, 1e9), min_size=1, max_size=100))
+    @settings(max_examples=100, deadline=None)
+    def test_phase_stats_properties(samples):
+        ps = PhaseStats()
+        for s in samples:
+            ps.record(s)
+        assert ps.count == len(samples)
+        assert math.isclose(ps.avg_ns, sum(samples) / len(samples),
+                            rel_tol=1e-9)
+        assert ps.worst_ns == max(samples)
+        assert ps.best_ns == min(samples)
+        # 1-ulp slack: float summation can round avg past max/min for
+        # near-identical samples
+        eps = 1e-9 * max(abs(ps.worst_ns), 1.0)
+        assert ps.worst_ns + eps >= ps.avg_ns >= ps.best_ns - eps
+        assert ps.std_ns >= 0
+
+
+def test_phase_stats_deterministic():
     ps = PhaseStats()
-    for s in samples:
+    for s in (100.0, 300.0, 200.0):
         ps.record(s)
-    assert ps.count == len(samples)
-    assert math.isclose(ps.avg_ns, sum(samples) / len(samples),
-                        rel_tol=1e-9)
-    assert ps.worst_ns == max(samples)
-    assert ps.best_ns == min(samples)
-    # 1-ulp slack: float summation can round avg past max/min for
-    # near-identical samples
-    eps = 1e-9 * max(abs(ps.worst_ns), 1.0)
-    assert ps.worst_ns + eps >= ps.avg_ns >= ps.best_ns - eps
-    assert ps.std_ns >= 0
+    assert ps.count == 3
+    assert ps.avg_ns == pytest.approx(200.0)
+    assert ps.worst_ns == 300.0 and ps.best_ns == 100.0
+    assert ps.std_ns == pytest.approx(math.sqrt(2e4 / 3))
 
 
 def test_tracker_phase_context():
@@ -44,3 +61,56 @@ def test_csv_rows():
     rows = t.csv_rows()
     assert len(rows) == 1
     assert rows[0].startswith("lk,trigger,2,2000,3000")
+
+
+# ---------------------------------------------------------------------------
+# QUEUE_DEPTH companion series
+# ---------------------------------------------------------------------------
+def test_record_depth_feeds_queue_depth_series():
+    t = WcetTracker("lk")
+    for d in (1, 2, 2, 3, 1):
+        t.record_depth(d)
+    s = t.stats[wcet.QUEUE_DEPTH]
+    assert s.count == 5
+    assert s.worst_ns == 3.0                      # deepest the pipe got
+    assert s.best_ns == 1.0
+    assert s.avg_ns == pytest.approx(9.0 / 5)     # avg > 1 ⇒ overlap
+
+
+def test_time_phases_excludes_queue_depth():
+    """Depth samples are dimensionless — printing them as ns would be a
+    lie, so every time-phase view must drop the series while report()
+    and csv_rows() (which carry the series name) keep it."""
+    t = WcetTracker("lk")
+    t.record("trigger", 1500.0)
+    t.record_depth(2)
+    phases = t.time_phases()
+    assert "trigger" in phases
+    assert wcet.QUEUE_DEPTH not in phases
+    assert wcet.QUEUE_DEPTH in t.report()
+    assert any(row.split(",")[1] == wcet.QUEUE_DEPTH
+               for row in t.csv_rows())
+
+
+def test_queue_depth_sampled_by_runtime_trigger():
+    """PersistentRuntime samples the in-flight depth at every trigger:
+    with max_inflight=2, triggering twice before retiring must record a
+    depth-2 sample (the overlap evidence the bench rows report)."""
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.core import mailbox as mb
+    from repro.core.persistent import PersistentRuntime
+
+    def work(state, desc):
+        return dict(state, x=state["x"] + 1.0), state["x"][:1]
+
+    rt = PersistentRuntime([("w", work)],
+                           result_template=jnp.zeros((1,), jnp.float32),
+                           max_inflight=2)
+    rt.boot({"x": jnp.zeros((4,), jnp.float32)})
+    rt.trigger(mb.WorkDescriptor(opcode=0, request_id=1))
+    rt.trigger(mb.WorkDescriptor(opcode=0, request_id=2))
+    rt.wait_all()
+    s = rt.tracker.stats[wcet.QUEUE_DEPTH]
+    assert s.count == 2
+    assert s.worst_ns == 2.0
+    rt.dispose()
