@@ -71,13 +71,26 @@ def _make_state(batch: int, dim: int = 256):
     }
 
 
-def _run_lk(batch: int, reps: int):
+LK_BLOCK = 16         # descriptors per batched doorbell in the LK arm
+
+
+def _run_lk(batch: int, reps: int, block: int = LK_BLOCK):
+    """LK arm, batched-doorbell style: descriptors go to the device in
+    ``block``-sized rings (one transfer + one compiled multi-step call
+    each), the way a host actually feeds a persistent kernel. The
+    tracker's per-phase totals are amortized per ITEM by the caller
+    (``total_ns / reps``) — per-doorbell averages would overstate the
+    per-item cost ``block``-fold."""
     rt = PersistentRuntime([("work", _work)],
-                           result_template=jnp.zeros((1,), jnp.float32))
+                           result_template=jnp.zeros((1,), jnp.float32),
+                           max_inflight=block, max_steps=block)
     rt.boot(_make_state(batch))
-    for i in range(reps):
-        rt.trigger(mb.WorkDescriptor(opcode=0, request_id=i))
-        rt.wait()
+    for base in range(0, reps, block):
+        n = min(block, reps - base)
+        rt.trigger_many([mb.WorkDescriptor(opcode=0, request_id=base + i)
+                         for i in range(n)])
+        for _ in range(n):
+            rt.wait()
     rt.dispose()
     return rt.tracker
 
@@ -116,17 +129,22 @@ def _run_pipelined_arm(items: int, reps: int):
     sync      — pump() per item: trigger + wait serialized, one cluster at a
                 time (the pre-pipeline Dispatcher behaviour);
     pipelined — drain(): trigger-all -> wait_any -> refill, host keeps
-                feeding every mailbox while devices run.
+                feeding every mailbox while devices run; each kick pass
+                coalesces its eligible items into one batched doorbell.
     """
     out = {}
-    for label, max_inflight in (("sync", 1), ("pipelined", 2)):
+    for label, max_inflight in (("sync", 1), ("pipelined", 4)):
         best_us, depth, stats = None, 0.0, None
         for _ in range(reps):
             disp = _make_dispatcher(max_inflight)
-            # warm the executables out of the timed region
+            # warm BOTH executables (single-step and the batched
+            # multi-step ring) out of the timed region
             for c in disp.runtimes:
                 disp.runtimes[c].run_sync(
                     mb.WorkDescriptor(opcode=0, request_id=999))
+                disp.runtimes[c].trigger_many(
+                    [mb.WorkDescriptor(opcode=0, request_id=998)])
+                disp.runtimes[c].wait_all()
             tickets = _submit_all(disp, items)
             t0 = time.perf_counter_ns()
             if label == "sync":
@@ -164,6 +182,9 @@ def _run_ticket_arm(items: int) -> tuple[float, dict]:
     for c in disp.runtimes:
         disp.runtimes[c].run_sync(mb.WorkDescriptor(opcode=0,
                                                     request_id=999))
+        disp.runtimes[c].trigger_many(
+            [mb.WorkDescriptor(opcode=0, request_id=998)] * 2)
+        disp.runtimes[c].wait_all()
     tickets = _submit_all(disp, items)
     t0 = time.perf_counter_ns()
     for t in tickets:
@@ -203,9 +224,10 @@ def _run_preempt_arm_once(blocks: int, probes: int) -> dict:
     """One traced measurement set: ``probes`` repeats of the HIGH-behind-
     one-LOW experiment per discipline, latencies derived from the
     TraceCollector's TRIGGER events (HIGH's first trigger timestamp minus
-    LOW's — the arrival is the instant the LOW step entered flight, since
-    the synchronous backend keeps the host stuck inside kick() until the
-    step completes) instead of hand timers. Returns per-discipline
+    LOW's — the HIGH submit lands within microseconds of the LOW trigger,
+    since dispatch is async and kick() returns at enqueue, so LOW's
+    trigger instant approximates the HIGH arrival) instead of hand
+    timers. Returns per-discipline
     LogHistogram summaries, so the BENCH rows carry a distribution."""
     rt = PersistentRuntime(
         [("lo", _preempt_lo, jnp.zeros((), jnp.int32)),
@@ -423,15 +445,21 @@ def run(smoke: bool = False) -> list[str]:
         for phase in ("init", "trigger", "wait", "dispose"):
             s_lk = lk.stats[phase]
             s_tr = tr.stats[phase]
+            # trigger/wait run once per DOORBELL on the LK arm: amortize
+            # the phase total over the items so both arms report per-item
+            # cost (init/dispose run once — total == avg either way)
+            lk_us = (s_lk.total_ns / reps / 1e3
+                     if phase in ("trigger", "wait") else s_lk.avg_ns / 1e3)
             rows.append(
-                f"dispatch_{label}_lk_{phase},{s_lk.avg_ns/1e3:.1f},"
-                f"worst_us={s_lk.worst_ns/1e3:.1f}")
+                f"dispatch_{label}_lk_{phase},{lk_us:.1f},"
+                f"worst_us={s_lk.worst_ns/1e3:.1f},block={LK_BLOCK}")
             rows.append(
                 f"dispatch_{label}_trad_{phase},{s_tr.avg_ns/1e3:.1f},"
                 f"worst_us={s_tr.worst_ns/1e3:.1f}")
-        speedup = tr.avg("trigger") / max(lk.avg("trigger"), 1.0)
+        lk_trig_ns = lk.stats["trigger"].total_ns / reps
+        speedup = tr.avg("trigger") / max(lk_trig_ns, 1.0)
         rows.append(f"dispatch_{label}_trigger_speedup,{speedup:.2f},"
-                    f"paper_reported=10x")
+                    f"paper_reported=10x,block={LK_BLOCK}")
 
     pipe = _run_pipelined_arm(pipe_items, pipe_reps)
     sync_us, _, sync_stats = pipe["sync"]

@@ -38,17 +38,42 @@ def default_json_path() -> str:
     return f"BENCH_{max(nums, default=0) + 1}.json"
 
 
-def _row_record(row: str) -> dict:
+def _prev_values() -> dict[str, float]:
+    """``name -> us_per_call`` from the HIGHEST-numbered existing
+    BENCH_*.json — the trajectory baseline ``*_speedup`` rows are
+    annotated against (empty when no prior file or it is unreadable)."""
+    best, best_n = None, -1
+    for p in _ROOT.glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", p.name)
+        if m and int(m.group(1)) > best_n:
+            best, best_n = p, int(m.group(1))
+    if best is None:
+        return {}
+    try:
+        with open(best) as f:
+            records = json.load(f)
+        return {r["name"]: r["us_per_call"] for r in records
+                if isinstance(r, dict) and r.get("us_per_call") is not None}
+    except (OSError, ValueError, KeyError, TypeError):
+        return {}
+
+
+def _row_record(row: str, prev: dict[str, float] | None = None) -> dict:
     """``name,us_per_call[,derived...]`` -> JSON record; non-numeric value
-    columns (e.g. ERROR rows) map us_per_call to None."""
+    columns (e.g. ERROR rows) map us_per_call to None. ``*_speedup`` rows
+    gain a ``prev=<value>`` derived field from the previous BENCH file so
+    each new file shows its own trajectory without hand-diffing."""
     parts = row.split(",")
     name = parts[0]
     try:
         us = float(parts[1]) if len(parts) > 1 else None
     except ValueError:
         us = None
-    return {"name": name, "us_per_call": us,
-            "derived": ",".join(parts[2:]) if len(parts) > 2 else ""}
+    derived = ",".join(parts[2:]) if len(parts) > 2 else ""
+    if prev and name.endswith("_speedup") and name in prev:
+        tag = f"prev={prev[name]:g}"
+        derived = f"{derived},{tag}" if derived else tag
+    return {"name": name, "us_per_call": us, "derived": derived}
 
 
 def main(argv=None) -> None:
@@ -64,14 +89,18 @@ def main(argv=None) -> None:
     if args.json_path is None:
         args.json_path = default_json_path()
     from benchmarks import bench_dispatch, bench_kernels, bench_throughput
+    prev = _prev_values()
     print("name,us_per_call,derived")
     records = []
     failures = 0
     for mod in (bench_dispatch, bench_throughput, bench_kernels):
         try:
             for row in mod.run(smoke=args.smoke):
-                print(row, flush=True)
-                records.append(_row_record(row))
+                rec = _row_record(row, prev)
+                print(",".join([rec["name"],
+                                row.split(",")[1] if "," in row else "",
+                                rec["derived"]]).rstrip(","), flush=True)
+                records.append(rec)
         except Exception as e:  # pragma: no cover — keep the harness going
             traceback.print_exc()
             failures += 1

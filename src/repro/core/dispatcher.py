@@ -20,7 +20,11 @@ room.
 Dispatch is asynchronous end to end: ``drain()`` runs an event loop that
 triggers the next eligible item on EVERY cluster with pipeline capacity
 before waiting on any completion (trigger-all → ``wait_any`` → refill), so
-the host keeps feeding mailboxes while devices run. WCET observation,
+the host keeps feeding mailboxes while devices run. A kick pass COALESCES
+its same-cluster triggers into one batched doorbell when the runtime
+offers ``trigger_many`` (one transfer + one compiled multi-step call for
+the whole pass); batch items still retire one at a time, with the block's
+wall time split evenly across them for WCET observation. WCET observation,
 straggler flagging, and failure replay all happen at completion-retirement
 time; the ``Mailbox`` keeps the per-cluster in-flight descriptor record, so
 a cluster that dies mid-flight has both its queued AND in-flight work
@@ -252,7 +256,11 @@ class Dispatcher:
         for c in self.runtimes:
             self.policy.add_cluster(c)
         self.mailbox = mb.Mailbox(max(runtimes) + 1 if runtimes else 0)
-        # FIFO of (item, trigger_us) per cluster — mirrors mailbox.pending
+        # FIFO of (item, trigger_us, batch) per cluster — mirrors
+        # mailbox.pending. ``batch`` is None for a solo trigger, or a
+        # shared {"n", "share_us"} record for every item of one coalesced
+        # doorbell (service attribution: the block's wall time is split
+        # evenly instead of the first item absorbing it all)
         self._inflight: dict[int, deque] = {c: deque() for c in runtimes}
         # when the cluster's previous step retired — service time under
         # pipelining starts at max(trigger, predecessor retirement), else a
@@ -298,6 +306,8 @@ class Dispatcher:
         self.shed_total = 0
         self.preemptions = 0       # remainders requeued past a chunk
         self.chunks_total = 0      # non-final chunk retirements
+        self.doorbells = 0         # coalesced trigger_many calls issued
+        self.coalesced_triggers = 0  # items that rode a batched doorbell
         self.chunk_protocol_errors = 0   # chunked work on a runtime
         #                                  whose from_gpu can't say so
         self._n_completed = 0
@@ -362,6 +372,8 @@ class Dispatcher:
             "shed": self.shed_total,
             "preemptions": self.preemptions,
             "chunks": self.chunks_total,
+            "doorbells": self.doorbells,
+            "coalesced_triggers": self.coalesced_triggers,
             "stragglers": self._n_stragglers,
             "ack_mismatches": self.mailbox.ack_mismatches,
             "chunk_protocol_errors": self.chunk_protocol_errors,
@@ -579,7 +591,7 @@ class Dispatcher:
                ignore: Sequence[QueueItem] = ()) -> None:
         self.policy.admit(
             cluster, desc, estimate=self._estimate_us,
-            inflight=[it.desc for it, _ in self._inflight[cluster]],
+            inflight=[it.desc for it, _t, _b in self._inflight[cluster]],
             now_us=self._clock(), ignore=ignore,
             chunk_estimate=self._chunk_estimate_us)
 
@@ -673,15 +685,52 @@ class Dispatcher:
         except Exception:
             # the descriptor is already in the mailbox record: append
             # the item so the replay keeps its ticket attached
-            self._inflight[cluster].append((item, t_trig))
+            self._inflight[cluster].append((item, t_trig, None))
             self._fail_cluster(cluster)
             raise
-        self._inflight[cluster].append((item, t_trig))
+        self._inflight[cluster].append((item, t_trig, None))
         if self.telemetry is not None:
             self.telemetry.emit(
                 EV_TRIGGER, t_us=t_trig, cluster=cluster,
                 request_id=item.desc.request_id, opcode=item.desc.opcode,
                 chunk=item.desc.chunk)
+        assert self.mailbox.depth(cluster) == \
+            len(self._inflight[cluster]), \
+            "mailbox / dispatcher in-flight records desynced"
+
+    def _trigger_batch(self, cluster: int, items: list) -> None:
+        """Coalesce a kick pass's same-cluster triggers into ONE batched
+        doorbell (``rt.trigger_many``): one mailbox record pass, one
+        device transfer, one compiled multi-step call. Retirement stays
+        per item; the shared ``batch`` record splits the block's wall
+        time evenly across its items at retire time. On trigger failure
+        every item is appended to the in-flight record first, so the
+        replay keeps all tickets attached (re-raises)."""
+        rt = self.runtimes[cluster]
+        for item in items:
+            if item.ticket is not None:
+                item.ticket._triggered = True
+        self.mailbox.post_many(cluster, [it.desc for it in items])
+        batch = {"n": len(items), "share_us": None}
+        t_trig = self._clock()
+        try:
+            rt.trigger_many([it.desc for it in items])
+        except Exception:
+            for item in items:
+                self._inflight[cluster].append((item, t_trig, batch))
+            self._fail_cluster(cluster)
+            raise
+        for item in items:
+            self._inflight[cluster].append((item, t_trig, batch))
+        self.doorbells += 1
+        self.coalesced_triggers += len(items)
+        if self.telemetry is not None:
+            for item in items:
+                self.telemetry.emit(
+                    EV_TRIGGER, t_us=t_trig, cluster=cluster,
+                    request_id=item.desc.request_id,
+                    opcode=item.desc.opcode, chunk=item.desc.chunk,
+                    batch=len(items))
         assert self.mailbox.depth(cluster) == \
             len(self._inflight[cluster]), \
             "mailbox / dispatcher in-flight records desynced"
@@ -722,7 +771,7 @@ class Dispatcher:
         queued + in-flight work replayed (re-raises)."""
         assert self.mailbox.depth(cluster) == len(self._inflight[cluster]), \
             "mailbox / dispatcher in-flight records desynced"
-        item, t0 = self._inflight[cluster][0]
+        item, t0, batch = self._inflight[cluster][0]
         rt = self.runtimes[cluster]
         try:
             result, from_gpu = rt.wait()
@@ -738,6 +787,13 @@ class Dispatcher:
         end = self._clock()
         self._last_retire_us[cluster] = end
         service = end - start
+        if batch is not None and batch["n"] > 1:
+            # one doorbell ran the whole block: split its wall time evenly
+            # across the items instead of letting the first retirement
+            # absorb the block's service into one item's observed WCET
+            if batch["share_us"] is None:
+                batch["share_us"] = service / batch["n"]
+            service = batch["share_us"]
         if item.started_us is None:
             item.started_us = start
         item.service_accum_us += service
@@ -894,11 +950,34 @@ class Dispatcher:
     # ------------------------------------------------------------------
     def kick(self, cluster: int) -> int:
         """Trigger queued work up to the cluster's pipeline capacity without
-        waiting. Returns the number of steps entered into flight."""
-        n = 0
-        while self._trigger_next(cluster):
-            n += 1
-        return n
+        waiting. Returns the number of steps entered into flight.
+
+        When the runtime supports batched doorbells (``trigger_many``),
+        every eligible item of this pass is coalesced into ONE doorbell;
+        runtimes without it (test doubles, legacy) get per-item triggers.
+        Coalescing happens at kick granularity, so each pump pass stays a
+        preemption opportunity: work submitted after this pass can still
+        beat the NEXT pass's batch."""
+        rt = self.runtimes[cluster]
+        if getattr(rt, "trigger_many", None) is None:
+            n = 0
+            while self._trigger_next(cluster):
+                n += 1
+            return n
+        items = []
+        while self.policy.has_queued(cluster) and \
+                len(self._inflight[cluster]) + len(items) < rt.max_inflight:
+            item = self.policy.pop_next(cluster, self._clock())
+            if item is None:
+                break              # deferred: budget exhausted
+            items.append(item)
+        if not items:
+            return 0
+        if len(items) == 1:
+            self._trigger_item(cluster, items[0])
+        else:
+            self._trigger_batch(cluster, items)
+        return len(items)
 
     def poll(self) -> list[Completion]:
         """Retire every already-completed in-flight step (non-blocking).
@@ -919,7 +998,15 @@ class Dispatcher:
     def wait_any(self) -> Optional[Completion]:
         """Retire ONE completion: any already-finished step if available,
         else block on the cluster with the oldest in-flight trigger.
-        Returns None when nothing is in flight."""
+        Returns None when nothing is in flight.
+
+        With in-flight work on MORE than one cluster, committing a
+        blocking wait to the oldest trigger gambles on finish order — so
+        the pump first polls ``ready()`` across clusters under an
+        exponential-backoff sleep (20µs → 2ms, bounded ~50ms) instead of
+        burning host CPU in a tight re-poll or blocking on the wrong
+        cluster. The bounded budget guarantees the blocking fallback is
+        reached even against runtimes whose ``ready()`` never fires."""
         for c in list(self.runtimes):
             if self._inflight.get(c) and self.runtimes[c].ready():
                 return self._retire(c)
@@ -927,6 +1014,15 @@ class Dispatcher:
                  if infl]
         if not cands:
             return None
+        if len(cands) > 1:
+            delay, budget = 20e-6, 0.05
+            while budget > 0:
+                time.sleep(delay)
+                budget -= delay
+                delay = min(delay * 2, 2e-3)
+                for c in list(self.runtimes):
+                    if self._inflight.get(c) and self.runtimes[c].ready():
+                        return self._retire(c)
         _, c = min(cands)
         return self._retire(c)
 
@@ -1043,6 +1139,8 @@ class Dispatcher:
             "shed": self.shed_total,
             "preemptions": self.preemptions,
             "chunks": self.chunks_total,
+            "doorbells": self.doorbells,
+            "coalesced_triggers": self.coalesced_triggers,
             "policy": self.policy.name,
             "avg_service_us": (self._service_sum_us / self._n_completed
                                if self._n_completed else 0.0),

@@ -24,6 +24,18 @@ completed but the item has more chunks to run. The host requeues the
 remainder (``WorkDescriptor.advance()``) through the normal scheduling
 lane, which is what lets a HIGH-criticality arrival slot in between two
 chunks of a long LOW item instead of waiting out its full WCET.
+
+Descriptor ring (batched doorbells): ``descriptor_ring(descs, capacity)``
+stacks up to ``capacity`` descriptors into ONE ``(capacity, DESC_WIDTH)``
+int32 block — the single transfer unit of a batched doorbell. Rows past
+``len(descs)`` are NOP-padded, so one compiled multi-step program serves
+every batch size 1..capacity without reshapes or recompiles. The device
+answers with an ACK BLOCK of the same shape: row *i* is the ``from_gpu``
+vector of step *i* (``W_STATUS`` = FINISHED/PREEMPTED per row, NOP for
+padding rows), which the host materializes with one readback and retires
+row by row. ``post_many`` records a whole ring's work rows in the
+in-flight FIFO in one call, keeping failure-replay ordering identical to
+sequential posts.
 """
 from __future__ import annotations
 
@@ -108,6 +120,29 @@ def nop_descriptor() -> np.ndarray:
     return d
 
 
+def encode_any(desc) -> np.ndarray:
+    """Encoded ``(DESC_WIDTH,)`` int32 vector from either form."""
+    if isinstance(desc, WorkDescriptor):
+        return desc.encode()
+    return np.asarray(desc, np.int32)
+
+
+def descriptor_ring(descs, capacity: int, out=None) -> np.ndarray:
+    """Stack descriptors into one ``(capacity, DESC_WIDTH)`` NOP-padded
+    ring — the transfer unit of a batched doorbell (module docstring).
+    ``out`` reuses a previously allocated ring buffer."""
+    n = len(descs)
+    if n > capacity:
+        raise ValueError(f"{n} descriptors exceed ring capacity {capacity}")
+    if out is None or out.shape != (capacity, DESC_WIDTH):
+        out = np.empty((capacity, DESC_WIDTH), np.int32)
+    for i, d in enumerate(descs):
+        out[i] = encode_any(d)
+    if n < capacity:
+        out[n:] = nop_descriptor()
+    return out
+
+
 def exit_descriptor() -> np.ndarray:
     d = np.zeros(DESC_WIDTH, np.int32)
     d[W_STATUS] = THREAD_EXIT
@@ -176,6 +211,21 @@ class Mailbox:
         self.to_gpu[cluster] = desc
         if is_work(desc):
             self.inflight[cluster].append(np.array(desc, np.int32))
+
+    def post_many(self, cluster: int, descs) -> int:
+        """Record one batched doorbell: every work row enters the cluster's
+        in-flight FIFO in ring order (identical replay semantics to N
+        sequential ``post`` calls); ``to_gpu`` holds the LAST row, matching
+        what a sequence of posts would leave visible. Returns the number of
+        work rows recorded."""
+        posted = 0
+        for d in descs:
+            d = encode_any(d)
+            self.to_gpu[cluster] = d
+            if is_work(d):
+                self.inflight[cluster].append(np.array(d, np.int32))
+                posted += 1
+        return posted
 
     def post_all(self, desc: np.ndarray) -> None:
         desc = np.asarray(desc)

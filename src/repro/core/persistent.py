@@ -14,6 +14,33 @@ while the device runs (the paper's whole point — async Trigger, separate
 Wait). Steps retire strictly in FIFO order; the chain of donated states
 gives XLA the data dependence that serializes them on device.
 
+Batched doorbells: ``trigger_many(descs)`` stacks up to ``max_steps``
+descriptors into ONE ``(max_steps, DESC_WIDTH)`` device transfer and ONE
+compiled call — a ``lax.scan`` over the descriptor ring threads the state
+and carries through every step device-side (the true multi-step
+persistent loop: the host refills the ring, the device consumes it).
+The scan's stacked outputs form the ACK BLOCK: one ``(max_steps,
+DESC_WIDTH)`` ``from_gpu`` array materialized with a single readback when
+the block's first step is waited on, after which the remaining steps
+retire from host memory at deque speed. Unused ring rows are padded with
+NOP descriptors (the nop branch of the step — they cost nothing and are
+never surfaced).
+
+Donation is BACKEND-AWARE (``donate=None``): on CPU, XLA runs donated
+executables synchronously — the enqueue absorbs the whole computation and
+the async Trigger/Wait split silently degenerates to run-to-completion
+per call (measured: a donated step's "enqueue" costs the full step, a
+plain one returns in tens of µs with the compute landing in Wait). Auto
+mode therefore donates only on accelerator backends, where donation is
+both supported and the memory win is real; pass ``donate=True``/``False``
+to force either.
+
+Double-buffered descriptors: a chunked item's NEXT chunk descriptor is
+staged device-side (``chunk + 1`` computed by a tiny compiled advance
+program) while the current chunk runs, so re-triggering a preempted
+remainder costs no fresh host transfer — the staged buffer is consumed
+on a key match (``staged_hits`` counts them).
+
 Chunked (resumable) work: the full work-fn contract is
 
     fn(state, carry, desc) -> (state, carry, result, done)
@@ -100,6 +127,48 @@ def _tree_ready(tree) -> bool:
     return True
 
 
+class _Block:
+    """One in-flight pipeline entry: a single step (``n == 1``,
+    ``stacked=False``) or a batched multi-step call whose stacked results
+    and ack block retire item by item (``idx`` walks the block). The
+    device arrays are swapped for host copies at materialization — ONE
+    readback per block, however many items it holds."""
+
+    __slots__ = ("results", "acks", "n", "idx", "stacked", "host_acks")
+
+    def __init__(self, results, acks, n: int, stacked: bool):
+        self.results = results
+        self.acks = acks
+        self.n = n
+        self.idx = 0
+        self.stacked = stacked
+        self.host_acks = None      # set at materialization
+
+    @property
+    def remaining(self) -> int:
+        return self.n - self.idx
+
+    def materialize(self) -> None:
+        """Block until the whole block finished; ONE ack readback."""
+        if self.host_acks is not None:
+            return
+        self.results = jax.block_until_ready(self.results)
+        self.host_acks = np.asarray(self.acks)
+        if self.stacked:
+            # one bulk readback of the stacked results too: per-item
+            # device gathers would re-pay a dispatch per retirement
+            self.results = jax.tree.map(np.asarray, self.results)
+
+    def pop_item(self) -> tuple:
+        """(result, from_gpu) of the next unretired item (materialized)."""
+        i = self.idx
+        self.idx += 1
+        if not self.stacked:
+            return self.results, self.host_acks
+        return (jax.tree.map(lambda a: a[i], self.results),
+                self.host_acks[i])
+
+
 class PersistentRuntime:
     """One persistent worker (paper: one SM / one cluster).
 
@@ -116,7 +185,13 @@ class PersistentRuntime:
     ``max_inflight`` bounds the in-flight pipeline: ``trigger()`` returns at
     enqueue, ``wait()`` (blocking) / ``poll()`` (non-blocking) retire the
     oldest step, ``wait_all()`` drains. ``trigger()`` on a full pipeline
-    raises — callers gate on ``can_trigger``.
+    raises — callers gate on ``can_trigger``. ``trigger_many()`` issues up
+    to ``max_steps`` descriptors as ONE batched doorbell (one transfer,
+    one compiled multi-step call); its items still retire one at a time
+    through ``wait()``/``poll()``, but the whole ack block materializes
+    with a single readback. ``donate=None`` donates the state only on
+    accelerator backends (donation serializes dispatch on CPU — see the
+    module docstring).
     """
 
     def __init__(self, work_fns: Sequence[tuple],
@@ -124,11 +199,14 @@ class PersistentRuntime:
                  tracker: Optional[WcetTracker] = None,
                  mesh=None,
                  state_shardings=None,
-                 donate: bool = True,
+                 donate: Optional[bool] = None,
                  max_inflight: int = 2,
+                 max_steps: int = 8,
                  telemetry: Optional[TraceCollector] = None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if max_steps < 1:
+            raise ValueError("max_steps must be >= 1")
         self.work_names = [entry[0] for entry in work_fns]
         self._fns = [_normalize_work_fn(entry[1]) for entry in work_fns]
         self._carry_templates = [
@@ -142,8 +220,17 @@ class PersistentRuntime:
         self._state = None
         self._carries = None
         self.max_inflight = int(max_inflight)
-        self._inflight: deque[tuple[Any, Any]] = deque()
+        self.max_steps = int(max_steps)
+        self._inflight: deque[_Block] = deque()
+        self._oldest_ready = False     # memoized ready() of the oldest block
         self._compiled = None
+        self._compiled_multi = None    # lazy: first trigger_many compiles it
+        self._advance = None           # compiled device-side chunk advance
+        # staged next-chunk descriptors (double buffer): key -> device vec
+        self._staged: dict[tuple[int, int], Any] = {}
+        self.staged_hits = 0           # re-triggers served device-side
+        self.doorbells = 0             # batched trigger_many transfers
+        self.batched_steps = 0         # steps issued through doorbells
         self.status = mb.THREAD_INIT
         self.steps = 0
         # runtime-level telemetry: step enqueue/retire instants with the
@@ -190,10 +277,32 @@ class PersistentRuntime:
         from_gpu = from_gpu.at[mb.W_NCHUNKS].set(desc[mb.W_NCHUNKS])
         return state, carries, result, from_gpu
 
+    def _lk_multi_step(self, state, carries, ring):
+        """True multi-step persistent loop: one compiled call consumes the
+        whole descriptor ring (``(max_steps, DESC_WIDTH)``), threading the
+        state and per-opcode carries through every step exactly as the
+        host-stepped ``_lk_step`` chain would — token-identical by
+        construction (the scan body IS ``_lk_step``). NOP-padded rows run
+        the nop branch. Outputs are the stacked results and the ack
+        block."""
+        def body(sc, desc):
+            state, carries = sc
+            state, carries, result, from_gpu = self._lk_step(
+                state, carries, desc)
+            return (state, carries), (result, from_gpu)
+        (state, carries), (results, acks) = jax.lax.scan(
+            body, (state, carries), ring)
+        return state, carries, results, acks
+
     # ------------------------------------------------------------------
     def boot(self, state) -> None:
         """Init phase: compile the persistent step and make state resident."""
         with self.tracker.phase("init"):
+            if self._donate is None:
+                # donation serializes dispatch on CPU (module docstring):
+                # auto mode keeps the async Trigger/Wait split alive there
+                # and donates only where XLA actually aliases buffers
+                self._donate = jax.default_backend() != "cpu"
             kwargs = {}
             if self._donate:
                 kwargs["donate_argnums"] = (0, 1)
@@ -210,64 +319,162 @@ class PersistentRuntime:
             carries = jax.device_put(tuple(
                 jax.tree.map(jnp.array, t) for t in self._carry_templates))
             self._compiled = fn.lower(state, carries, desc0).compile()
+            # the double buffer's device-side descriptor advance
+            self._advance = jax.jit(
+                lambda d: d.at[mb.W_CHUNK].add(1)).lower(desc0).compile()
             self._state = state
             self._carries = carries
         self.status = mb.THREAD_NOP
 
+    def _ensure_multi(self):
+        """Compile the ring variant on first use — booting pays only the
+        single-step compile, batch users pay the scan compile once."""
+        if self._compiled_multi is None:
+            kwargs = {}
+            if self._donate:
+                kwargs["donate_argnums"] = (0, 1)
+            ring0 = jnp.asarray(
+                np.tile(mb.nop_descriptor(), (self.max_steps, 1)))
+            self._compiled_multi = jax.jit(
+                self._lk_multi_step, **kwargs).lower(
+                    self._state, self._carries, ring0).compile()
+        return self._compiled_multi
+
     # ------------------------------------------------------------------
     @property
     def inflight(self) -> int:
-        """Number of enqueued-but-unretired steps."""
-        return len(self._inflight)
+        """Number of enqueued-but-unretired steps (batch items counted)."""
+        return sum(blk.remaining for blk in self._inflight)
 
     @property
     def can_trigger(self) -> bool:
         return self._compiled is not None and \
-            len(self._inflight) < self.max_inflight
+            self.inflight < self.max_inflight
+
+    @staticmethod
+    def _desc_fields(desc) -> tuple:
+        """(request_id, opcode, chunk, n_chunks, encoded) from either a
+        WorkDescriptor or an encoded vector — host-side ints, read ONCE
+        (the zero-readback hot path: no repeated numpy conversions)."""
+        if isinstance(desc, mb.WorkDescriptor):
+            return (desc.request_id, desc.opcode, desc.chunk,
+                    desc.n_chunks, None)
+        enc = np.asarray(desc)
+        return (int(enc[mb.W_REQID]), int(enc[mb.W_OPCODE]),
+                int(enc[mb.W_CHUNK]), int(enc[mb.W_NCHUNKS]), enc)
+
+    def _stage_next(self, rid: int, chunk: int, n_chunks: int,
+                    dvec) -> None:
+        """Double buffer: stage the NEXT chunk's descriptor device-side
+        (a compiled ``chunk += 1``) while the current chunk runs, so a
+        remainder re-trigger pays no fresh host transfer."""
+        if n_chunks > chunk + 1:
+            self._staged[(rid, chunk + 1)] = self._advance(dvec)
+            while len(self._staged) > 4:       # bounded staging buffer
+                self._staged.pop(next(iter(self._staged)))
 
     def trigger(self, desc) -> None:
         """Send one mailbox descriptor (async — returns at enqueue)."""
         if self._compiled is None:
             raise RuntimeError("boot() first")
-        if len(self._inflight) >= self.max_inflight:
+        if self.inflight >= self.max_inflight:
             raise RuntimeError(
                 f"in-flight pipeline full (max_inflight={self.max_inflight});"
                 " retire with wait()/poll() first")
-        if isinstance(desc, mb.WorkDescriptor):
-            desc = desc.encode()
+        rid, opcode, chunk, n_chunks, enc = self._desc_fields(desc)
         with self.tracker.phase("trigger"):
-            dvec = jnp.asarray(desc)
+            dvec = self._staged.pop((rid, chunk), None)
+            if dvec is not None:
+                self.staged_hits += 1          # device-resident re-trigger
+            else:
+                dvec = jnp.asarray(enc if enc is not None
+                                   else desc.encode())
+            self._stage_next(rid, chunk, n_chunks, dvec)
             new_state, new_carries, result, from_gpu = self._compiled(
                 self._state, self._carries, dvec)
             # async dispatch: we return as soon as the work is enqueued
             self._state = new_state
             self._carries = new_carries
-            self._inflight.append((result, from_gpu))
-        self.tracker.record_depth(len(self._inflight))
+            self._inflight.append(_Block(result, from_gpu, 1, False))
+        self.tracker.record_depth(self.inflight)
         if self.telemetry is not None:
             self.telemetry.emit(
                 EV_RT_TRIGGER, cluster=self.telemetry_cluster,
-                request_id=int(np.asarray(desc)[mb.W_REQID]),
-                opcode=int(np.asarray(desc)[mb.W_OPCODE]),
-                chunk=int(np.asarray(desc)[mb.W_CHUNK]),
-                depth=len(self._inflight))
+                request_id=rid, opcode=opcode, chunk=chunk,
+                depth=self.inflight)
         self.status = mb.THREAD_WORKING
         self.steps += 1
 
+    def trigger_many(self, descs) -> int:
+        """Batched doorbell: issue N descriptors as ``ceil(N/max_steps)``
+        ring transfers + compiled multi-step calls (ONE of each when
+        ``N <= max_steps``), instead of N transfers + N dispatches. Items
+        retire through ``wait()``/``poll()`` in issue order, exactly as N
+        sequential ``trigger()`` calls would; returns N."""
+        if self._compiled is None:
+            raise RuntimeError("boot() first")
+        descs = list(descs)
+        if not descs:
+            return 0
+        if self.inflight + len(descs) > self.max_inflight:
+            raise RuntimeError(
+                f"batch of {len(descs)} exceeds pipeline capacity "
+                f"(max_inflight={self.max_inflight}, "
+                f"inflight={self.inflight})")
+        fn = self._ensure_multi()
+        for base in range(0, len(descs), self.max_steps):
+            block = descs[base:base + self.max_steps]
+            ring = mb.descriptor_ring(block, self.max_steps)
+            with self.tracker.phase("trigger"):
+                ring_dev = jnp.asarray(ring)
+                new_state, new_carries, results, acks = fn(
+                    self._state, self._carries, ring_dev)
+                self._state = new_state
+                self._carries = new_carries
+                self._inflight.append(
+                    _Block(results, acks, len(block), True))
+            self.doorbells += 1
+            self.batched_steps += len(block)
+            self.steps += len(block)
+            self.tracker.record_depth(self.inflight)
+            if self.telemetry is not None:
+                # one batch-stamped event per doorbell — the hot path
+                # reads NOTHING back from the device for telemetry
+                rid, opcode, chunk, _, _ = self._desc_fields(block[0])
+                self.telemetry.emit(
+                    EV_RT_TRIGGER, cluster=self.telemetry_cluster,
+                    request_id=rid, opcode=opcode, chunk=chunk,
+                    depth=self.inflight, batch=len(block))
+        self.status = mb.THREAD_WORKING
+        return len(descs)
+
     def ready(self) -> bool:
-        """Non-blocking: has the OLDEST in-flight step finished on device?"""
+        """Non-blocking: has the OLDEST in-flight step finished on device?
+        The check is memoized — once the oldest block reports ready it
+        stays ready until retired, so pump loops that poll ``ready()``
+        before every retirement don't re-walk the tree each time."""
         if not self._inflight:
             return False
-        return _tree_ready(self._inflight[0])
+        if self._oldest_ready:
+            return True
+        blk = self._inflight[0]
+        self._oldest_ready = blk.host_acks is not None or \
+            _tree_ready((blk.results, blk.acks))
+        return self._oldest_ready
 
     def wait(self):
         """Block until the oldest in-flight step completes; returns
-        (result, from_gpu). Steps retire strictly in trigger order."""
+        (result, from_gpu). Steps retire strictly in trigger order. The
+        first wait on a batched block materializes the WHOLE ack block
+        (one readback); its remaining items then retire host-side."""
         assert self._inflight, "nothing in flight"
+        blk = self._inflight[0]
         with self.tracker.phase("wait"):
-            result, from_gpu = self._inflight.popleft()
-            result = jax.block_until_ready(result)
-            from_gpu = np.asarray(from_gpu)
+            blk.materialize()
+            result, from_gpu = blk.pop_item()
+            if blk.remaining == 0:
+                self._inflight.popleft()
+                self._oldest_ready = False
         self.status = (mb.THREAD_WORKING if self._inflight
                        else int(from_gpu[mb.W_STATUS]))
         if self.telemetry is not None:
@@ -276,7 +483,7 @@ class PersistentRuntime:
                 request_id=int(from_gpu[mb.W_REQID]),
                 chunk=int(from_gpu[mb.W_CHUNK]),
                 status=int(from_gpu[mb.W_STATUS]),
-                depth=len(self._inflight))
+                depth=self.inflight)
         return result, from_gpu
 
     def poll(self):
@@ -317,7 +524,10 @@ class PersistentRuntime:
         """Release device state (paper: Dispose phase). Drains in-flight."""
         with self.tracker.phase("dispose"):
             while self._inflight:
-                jax.block_until_ready(self._inflight.popleft())
+                blk = self._inflight.popleft()
+                jax.block_until_ready((blk.results, blk.acks))
+            self._oldest_ready = False
+            self._staged.clear()
             if self._state is not None:
                 for leaf in jax.tree.leaves(self._state):
                     leaf.delete()
@@ -327,6 +537,8 @@ class PersistentRuntime:
             self._state = None
             self._carries = None
             self._compiled = None
+            self._compiled_multi = None
+            self._advance = None
         self.status = mb.THREAD_EXIT
 
 

@@ -113,6 +113,8 @@ class LkSystem:
                  cluster_shape: Optional[tuple] = None,
                  work_classes: Sequence[WorkClass] = (),
                  max_inflight: int = 2,
+                 max_steps: int = 8,
+                 donate: Optional[bool] = None,
                  completion_window: int = 1024,
                  straggler_factor: float = 4.0,
                  state_shardings_factory: Optional[
@@ -133,6 +135,8 @@ class LkSystem:
         self._state_factory = state_factory
         self._result_template = result_template
         self._max_inflight = int(max_inflight)
+        self._max_steps = int(max_steps)
+        self._donate = donate
         self._completion_window = int(completion_window)
         self._straggler_factor = straggler_factor
         self._shardings_factory = state_shardings_factory
@@ -405,6 +409,8 @@ class LkSystem:
             mesh=cl.mesh if shardings is not None else None,
             state_shardings=shardings,
             max_inflight=self._max_inflight,
+            max_steps=self._max_steps,
+            donate=self._donate,
             telemetry=self.telemetry)
         rt.boot(self._state_factory(cl))
         return rt

@@ -46,6 +46,10 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="prompt tokens per prefill chunk "
                          "(default: the prefill bucket size)")
+    ap.add_argument("--max-steps", type=int, default=8,
+                    help="descriptor-ring capacity of one batched "
+                         "doorbell (trigger_many rows per device "
+                         "transfer + compiled multi-step call)")
     ap.add_argument("--no-preempt", action="store_true",
                     help="disable chunk-boundary preemption (chunks of "
                          "one item run back to back — the pre-chunking "
@@ -69,6 +73,7 @@ def main(argv=None):
                            max_seq=args.max_seq, tracker=tracker,
                            completion_window=args.completion_window,
                            policy=args.policy,
+                           max_steps=args.max_steps,
                            chunked_prefill=args.chunked_prefill,
                            prefill_chunk_tokens=args.prefill_chunk,
                            telemetry=collector)

@@ -71,6 +71,8 @@ class ServingEngine:
                  tracker: Optional[WcetTracker] = None,
                  dispatcher: Optional[Dispatcher] = None,
                  cluster_id: int = 0, max_inflight: int = 2,
+                 max_steps: int = 8,
+                 donate: Optional[bool] = None,
                  completion_window: Optional[int] = None,
                  policy: Union[str, SchedPolicy, None] = None,
                  decode_budget_us: float = DECODE_BUDGET_US,
@@ -206,6 +208,7 @@ class ServingEngine:
             work_fns,
             result_template=jnp.zeros((max_batch,), jnp.int32),
             tracker=self.tracker, max_inflight=max_inflight,
+            max_steps=max_steps, donate=donate,
             telemetry=telemetry)
         if telemetry is not None:
             self.rt.telemetry_cluster = cluster_id

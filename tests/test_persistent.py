@@ -49,16 +49,40 @@ def test_nop_leaves_state_and_reports_nop(rt):
     assert float(res[0]) == 16.0                  # state survived the NOP
 
 
-def test_state_is_device_resident(rt):
+def test_state_is_device_resident():
     """Trigger must not re-stage state: the state buffers persist between
-    steps (same donated lineage) and only the descriptor is transferred."""
-    rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=2))
-    x1 = rt.state["x"]
-    rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=2))
-    assert float(rt.state["x"][0]) == 4.0
-    # old donated buffer is gone — proof the step consumed it in place
-    with pytest.raises(RuntimeError):
-        _ = np.asarray(x1)
+    steps (same donated lineage) and only the descriptor is transferred.
+    Donation is pinned on — the auto default keeps it OFF on CPU (where
+    donated executables run synchronously), so the buffer-consumed proof
+    below needs the explicit knob."""
+    rt = PersistentRuntime([("add", add_fn), ("mul", mul_fn)],
+                           result_template=jnp.zeros((1,), jnp.float32),
+                           donate=True)
+    rt.boot({"x": jnp.zeros((8,), jnp.float32)})
+    try:
+        rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=2))
+        x1 = rt.state["x"]
+        rt.run_sync(mb.WorkDescriptor(opcode=0, arg0=2))
+        assert float(rt.state["x"][0]) == 4.0
+        # old donated buffer is gone — proof the step consumed it in place
+        with pytest.raises(RuntimeError):
+            _ = np.asarray(x1)
+    finally:
+        rt.dispose()
+
+
+def test_donate_auto_resolves_by_backend():
+    """``donate=None`` resolves at boot: OFF on CPU (donation serializes
+    dispatch there), ON on accelerator backends."""
+    rt = PersistentRuntime([("add", add_fn)],
+                           result_template=jnp.zeros((1,), jnp.float32))
+    assert rt._donate is None
+    rt.boot({"x": jnp.zeros((8,), jnp.float32)})
+    try:
+        expected = jax.default_backend() != "cpu"
+        assert rt._donate is expected
+    finally:
+        rt.dispose()
 
 
 def test_trigger_without_wait_then_wait(rt):
