@@ -1,0 +1,192 @@
+"""Continuous-batching stream serving: per-stream TTFT and response
+percentiles under an admission-governed mixed-criticality open fleet.
+
+The scenario the frontend exists for: many more concurrent request
+streams than engine slots (full run: 64 streams over 8 slots, every 4th
+HIGH-criticality), chunked device prefills interleaving with lockstep
+decode, LOW streams shed and re-admitted under slot pressure while HIGH
+streams keep their admitted response bound. Every row is derived from
+the shared TraceCollector's EV_STREAM timeline — the bench does not
+instrument the engine separately, it reads the same telemetry operators
+would.
+
+Rows:
+  serving_add_request_return_us  — wall time of one add_request call for
+                                   a long prompt (non-blocking proof:
+                                   its prefill is still pending at
+                                   return)
+  serving_ttft_p50/p95/p99_us    — open → first token, per stream
+  serving_stream_response_p50/p95/p99_us — open → close, per stream
+  serving_high_response_p99_us / serving_low_response_p99_us
+  serving_high_bound_violations  — BOUND_VIOLATIONs on the HIGH stream
+                                   class (MUST be 0: admitted bounds held)
+  serving_shed_streams           — LOW streams shed under overload
+                                   (derived: how many re-admitted + closed)
+  serving_overlap_decode_during_prefill — decode resolutions landing
+                                   inside some stream's prefill-chunk
+                                   span (>0 proves decode/prefill overlap)
+
+Standalone: ``python benchmarks/bench_serving.py [--smoke] [out.json]``
+writes the rows in the BENCH record format (CI smoke artifact); the
+module also registers in benchmarks/run.py so full runs fold these rows
+into the auto-numbered BENCH_<n>.json trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.sched import CRIT_HIGH, CRIT_LOW
+from repro.core.telemetry import EV_RESOLVE, EV_STREAM
+from repro.core.telemetry.monitor import BOUND_VIOLATION
+from repro.distributed import ShardCtx
+from repro.models import build
+from repro.serving import ServingEngine, StreamFrontend
+from repro.serving.engine import OP_DECODE
+from repro.serving.streams import OP_STREAM_HIGH, OP_STREAM_LOW
+
+
+def _percentile_rows(tag: str, vals: list[float]) -> list[str]:
+    if not vals:
+        return [f"{tag}_p99_us,0,EMPTY"]
+    v = np.asarray(vals, np.float64)
+    return [f"{tag}_p{p}_us,{np.percentile(v, p):.0f},n={len(vals)}"
+            for p in (50, 95, 99)]
+
+
+def _overlap_count(collector) -> int:
+    """Decode resolutions whose timestamp falls inside some stream's
+    prefill-chunk span (first..last chunk event) — each one is a decode
+    step that ran WHILE a prefill was still in progress."""
+    spans: dict[int, list[int]] = {}
+    for e in collector.events_of(EV_STREAM):
+        if e.extra.get("phase") == "prefill_chunk":
+            spans.setdefault(e.request_id, []).append(e.t_us)
+    windows = [(min(ts), max(ts)) for ts in spans.values() if len(ts) >= 2]
+    decode_ts = [e.t_us for e in collector.events_of(EV_RESOLVE)
+                 if e.opcode == OP_DECODE]
+    return sum(1 for t in decode_ts
+               if any(lo <= t <= hi for lo, hi in windows))
+
+
+def run(smoke: bool = False) -> list[str]:
+    n_streams = 16 if smoke else 64
+    max_new = 4 if smoke else 8
+    cfg = get_config("llama3-8b").reduced()
+    model = build(cfg, ShardCtx.single(kind="decode"))
+    params = model.init(jax.random.key(0))
+    eng = ServingEngine(model, params, max_batch=8, max_seq=96,
+                        chunked_prefill=True, prefill_chunk_tokens=4,
+                        max_inflight=4)
+    rng = np.random.default_rng(0)
+
+    # --- non-blocking add_request (measured before the frontend owns the
+    # engine): the call must return while its own prefill is still
+    # pending in the dispatcher queue
+    warm = eng.add_request(1, rng.integers(0, cfg.vocab_size, 16),
+                           max_new_tokens=2)
+    eng.prefill_tickets[warm].result()         # compile staging/prefill
+    while eng.slots.any_active:
+        eng.step()
+    long_prompt = rng.integers(0, cfg.vocab_size, 64)
+    t0 = time.perf_counter()
+    slot = eng.add_request(2, long_prompt, max_new_tokens=2)
+    add_us = (time.perf_counter() - t0) * 1e6
+    pending = eng.prefill_tickets[slot].completion is None
+    rows = [f"serving_add_request_return_us,{add_us:.0f},"
+            f"prefill_pending_at_return={pending}"]
+    while eng.slots.any_active:
+        eng.step()
+
+    # --- the stream fleet ------------------------------------------------
+    fe = StreamFrontend(eng)
+    fe.open_stream(rng.integers(0, cfg.vocab_size, 12),
+                   max_new_tokens=3)           # warm-up: observed WCETs
+    fe.serve(max_polls=10_000)
+    # open the LOW population up-front, then inject the HIGH arrivals
+    # while the LOWs are mid-flight (every 4th stream is HIGH): a HIGH
+    # arriving with every slot occupied is exactly the overload case the
+    # shed/re-admit policy exists for
+    n_high = n_streams // 4
+    sids = []
+    t0 = time.perf_counter()
+    for _ in range(n_streams - n_high):
+        prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 25)))
+        sids.append(fe.open_stream(prompt, max_new_tokens=max_new,
+                                   criticality=CRIT_LOW))
+    for _ in range(n_high):
+        fe.poll()
+        fe.poll()
+        prompt = rng.integers(0, cfg.vocab_size, int(rng.integers(8, 25)))
+        sids.append(fe.open_stream(prompt, max_new_tokens=max_new,
+                                   criticality=CRIT_HIGH))
+    fe.serve(max_polls=1_000_000)
+    wall = time.perf_counter() - t0
+
+    # a stream shed after reaching decode re-emits first_token on its
+    # re-admission attempt; TTFT is the FIRST one (the client had tokens
+    # streaming then, even though the restart discarded them)
+    ttft: dict[int, float] = {}
+    resp = {OP_STREAM_HIGH: [], OP_STREAM_LOW: []}
+    for e in fe.collector.events_of(EV_STREAM):
+        if e.request_id not in sids:
+            continue
+        if e.extra.get("phase") == "first_token":
+            ttft.setdefault(e.request_id, float(e.extra["ttft_us"]))
+        elif e.extra.get("phase") == "close":
+            resp[e.opcode].append(float(e.extra["response_us"]))
+    all_resp = resp[OP_STREAM_HIGH] + resp[OP_STREAM_LOW]
+    rows += _percentile_rows("serving_ttft", list(ttft.values()))
+    rows += _percentile_rows("serving_stream_response", all_resp)
+    for tag, op in (("high", OP_STREAM_HIGH), ("low", OP_STREAM_LOW)):
+        if resp[op]:
+            rows.append(f"serving_{tag}_response_p99_us,"
+                        f"{np.percentile(resp[op], 99):.0f},n={len(resp[op])}")
+    high_viol = sum(1 for v in fe.monitor.ledger
+                    if v.kind == BOUND_VIOLATION
+                    and v.opcode == OP_STREAM_HIGH)
+    rows.append(f"serving_high_bound_violations,{high_viol},must_be_0")
+    rows.append(f"serving_shed_streams,{fe.shed_count},"
+                f"readmitted={fe.readmitted},closed={fe.closed}")
+    rows.append(f"serving_overlap_decode_during_prefill,"
+                f"{_overlap_count(fe.collector)},decode_resolves_inside_"
+                f"prefill_chunk_spans")
+    toks = sum(len(fe.result(s)) for s in sids)
+    rows.append(f"serving_stream_tokens_per_s,{toks / wall:.0f},"
+                f"streams={n_streams},wall_s={wall:.2f}")
+    eng.dispose()
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path", nargs="?", default=None)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    print("name,us_per_call,derived")
+    records = []
+    for row in run(smoke=args.smoke):
+        print(row, flush=True)
+        parts = row.split(",")
+        try:
+            us = float(parts[1])
+        except (IndexError, ValueError):
+            us = None
+        records.append({"name": parts[0], "us_per_call": us,
+                        "derived": ",".join(parts[2:])})
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(records, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(records)} rows to {args.json_path}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,9 @@
 #                        the pipelined-drain and ticket-result arms, and
 #                        the edf/fp/server scheduling-policy comparison
 #   bench_throughput  -> train/serve throughput of the persistent stack
+#   bench_serving     -> continuous-batching stream frontend: per-stream
+#                        TTFT/response percentiles, HIGH bound violations,
+#                        shed/re-admit counts, decode/prefill overlap
 #   bench_kernels     -> flash-vs-masked attention, executor dispatch rate
 #
 # ``--smoke`` is the CI fast path: every module runs with reduced reps so
@@ -88,12 +91,14 @@ def main(argv=None) -> None:
     explicit_json = args.json_path is not None
     if args.json_path is None:
         args.json_path = default_json_path()
-    from benchmarks import bench_dispatch, bench_kernels, bench_throughput
+    from benchmarks import (bench_dispatch, bench_kernels, bench_serving,
+                            bench_throughput)
     prev = _prev_values()
     print("name,us_per_call,derived")
     records = []
     failures = 0
-    for mod in (bench_dispatch, bench_throughput, bench_kernels):
+    for mod in (bench_dispatch, bench_throughput, bench_serving,
+                bench_kernels):
         try:
             for row in mod.run(smoke=args.smoke):
                 rec = _row_record(row, prev)

@@ -25,8 +25,8 @@ traced workload end to end.
 from repro.core.telemetry.events import (
     EV_ADMIT, EV_CANCEL, EV_CHUNK_RETIRE, EV_ENGINE, EV_FAIL, EV_HEAL,
     EV_PREEMPT, EV_REJECT, EV_REQUEUE, EV_RESOLVE, EV_RT_RETIRE,
-    EV_RT_TRIGGER, EV_SHED, EV_SUBMIT, EV_TRIGGER, EVENT_KINDS, Event,
-    TraceCollector,
+    EV_RT_TRIGGER, EV_SHED, EV_STREAM, EV_SUBMIT, EV_TRIGGER, EVENT_KINDS,
+    Event, TraceCollector,
 )
 from repro.core.telemetry.export import chrome_trace, write_chrome, write_csv
 from repro.core.telemetry.histogram import LogHistogram
@@ -38,7 +38,8 @@ __all__ = [
     "BOUND_VIOLATION", "BoundMonitor", "DEADLINE_MISS", "EVENT_KINDS",
     "EV_ADMIT", "EV_CANCEL", "EV_CHUNK_RETIRE", "EV_ENGINE", "EV_FAIL",
     "EV_HEAL", "EV_PREEMPT", "EV_REJECT", "EV_REQUEUE", "EV_RESOLVE",
-    "EV_RT_RETIRE", "EV_RT_TRIGGER", "EV_SHED", "EV_SUBMIT", "EV_TRIGGER",
+    "EV_RT_RETIRE", "EV_RT_TRIGGER", "EV_SHED", "EV_STREAM", "EV_SUBMIT",
+    "EV_TRIGGER",
     "Event", "LogHistogram", "TraceCollector", "Violation", "WCET_OVERRUN",
     "chrome_trace", "write_chrome", "write_csv",
 ]

@@ -37,7 +37,7 @@ __all__ = ["Event", "TraceCollector", "EVENT_KINDS",
            "EV_SUBMIT", "EV_ADMIT", "EV_REJECT", "EV_SHED", "EV_TRIGGER",
            "EV_CHUNK_RETIRE", "EV_PREEMPT", "EV_REQUEUE", "EV_RESOLVE",
            "EV_CANCEL", "EV_FAIL", "EV_HEAL", "EV_RT_TRIGGER",
-           "EV_RT_RETIRE", "EV_ENGINE"]
+           "EV_RT_RETIRE", "EV_ENGINE", "EV_STREAM"]
 
 # -- event kinds (the wire vocabulary of the timeline) ---------------------
 EV_SUBMIT = "submit"            # a descriptor entered a policy queue
@@ -55,11 +55,13 @@ EV_HEAL = "heal"                # LkSystem rebuilt capacity after a failure
 EV_RT_TRIGGER = "rt_trigger"    # runtime-level: step enqueued (depth sample)
 EV_RT_RETIRE = "rt_retire"      # runtime-level: oldest step retired
 EV_ENGINE = "engine"            # serving-engine lifecycle (add_request, …)
+EV_STREAM = "stream"            # request-stream lifecycle (open/slot-bind/
+#                                 prefill-chunk/first-token/decode/shed/close)
 
 EVENT_KINDS = (
     EV_SUBMIT, EV_ADMIT, EV_REJECT, EV_SHED, EV_TRIGGER, EV_CHUNK_RETIRE,
     EV_PREEMPT, EV_REQUEUE, EV_RESOLVE, EV_CANCEL, EV_FAIL, EV_HEAL,
-    EV_RT_TRIGGER, EV_RT_RETIRE, EV_ENGINE,
+    EV_RT_TRIGGER, EV_RT_RETIRE, EV_ENGINE, EV_STREAM,
 )
 
 
@@ -101,6 +103,8 @@ class TraceCollector:
         self._hists: dict[tuple[str, int], LogHistogram] = {}
         self._names: dict[int, str] = {}
         self._sources: dict[str, Callable[[], dict]] = {}
+        self._subscribers: list[Callable[[Event], None]] = []
+        self.subscriber_errors: list[BaseException] = []
 
     # -- events ---------------------------------------------------------
     def emit(self, kind: str, *, t_us: Optional[int] = None,
@@ -115,7 +119,21 @@ class TraceCollector:
                    chunk=chunk, extra=extra)
         self._events.append(ev)
         self._kind_counts[kind] = self._kind_counts.get(kind, 0) + 1
+        for fn in self._subscribers:
+            try:
+                fn(ev)
+            except Exception as e:   # a raising observer must not lose work
+                self.subscriber_errors.append(e)
         return ev
+
+    def subscribe(self, fn: Callable[[Event], None]) -> None:
+        """Register a live event observer, fired synchronously inside
+        ``emit`` for every event (after it is appended to the ring). An
+        observer MAY emit further events (the stream frontend reacts to
+        ``chunk_retire`` by emitting a ``stream`` span); it must guard its
+        own recursion. A raising observer is captured on
+        ``subscriber_errors`` and never propagated into the emitter."""
+        self._subscribers.append(fn)
 
     @property
     def events(self) -> list[Event]:

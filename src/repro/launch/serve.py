@@ -54,6 +54,15 @@ def main(argv=None):
                     help="disable chunk-boundary preemption (chunks of "
                          "one item run back to back — the pre-chunking "
                          "dispatch order)")
+    ap.add_argument("--streams", action="store_true",
+                    help="serve through the continuous-batching stream "
+                         "frontend: each request is an admission-governed "
+                         "stream (HIGH/LOW criticality), LOW streams shed "
+                         "and re-admitted under overload, per-stream "
+                         "TTFT/response quantiles reported")
+    ap.add_argument("--high-every", type=int, default=4,
+                    help="with --streams: every Nth stream is "
+                         "HIGH-criticality (default 4)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="attach the telemetry collector and export a "
                          "Chrome/Perfetto trace JSON of the run to PATH "
@@ -92,8 +101,35 @@ def main(argv=None):
             size=(cfg.vision_tokens, cfg.d_model)).astype(np.float32)}
             for _ in range(args.requests)]
 
-    outs = engine.generate(prompts, max_new_tokens=args.max_new,
-                           extras=extras)
+    if args.streams:
+        if extras is not None:
+            raise SystemExit("--streams does not support encdec/vlm "
+                             "archs (prompt extras need the host "
+                             "prefill path with per-request tensors)")
+        from repro.core.sched import CRIT_HIGH, CRIT_LOW
+        from repro.serving import StreamFrontend
+        fe = StreamFrontend(engine, collector=collector)
+        fe.open_stream(prompts[0], max_new_tokens=2)      # warm WCETs
+        fe.serve()
+        sids = []
+        for i, p in enumerate(prompts):
+            crit = CRIT_HIGH if args.high_every and \
+                i % args.high_every == 0 else CRIT_LOW
+            sids.append(fe.open_stream(p, max_new_tokens=args.max_new,
+                                       criticality=crit))
+            fe.poll()             # arrivals land on a loaded engine
+        fe.serve()
+        outs = [fe.result(s) for s in sids]
+        print(f"[serve] streams: opened={fe.opened} shed={fe.shed_count} "
+              f"readmitted={fe.readmitted} closed={fe.closed} "
+              f"evictions={engine.slots.evictions}")
+        for line in fe.collector.format_table("stream_ttft_us"):
+            print(f"[serve] {line}")
+        for line in fe.collector.format_table("stream_response_us"):
+            print(f"[serve] {line}")
+    else:
+        outs = engine.generate(prompts, max_new_tokens=args.max_new,
+                               extras=extras)
     for i, o in enumerate(outs[: min(4, len(outs))]):
         print(f"[serve] req{i}: {o}")
     print(f"[serve] completed {len(outs)} requests, "

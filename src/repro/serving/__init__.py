@@ -1,2 +1,6 @@
 from repro.serving.engine import ServingEngine
-from repro.serving.kv_cache import SlotManager, insert_slot_caches
+from repro.serving.kv_cache import (PH_DECODING, PH_FINISHED, PH_FREE,
+                                    PH_PREFILL, SlotManager,
+                                    extract_slot_caches, insert_slot_caches)
+from repro.serving.streams import (OP_STREAM_HIGH, OP_STREAM_LOW,
+                                   StreamFrontend, StreamRequest)

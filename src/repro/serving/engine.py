@@ -7,28 +7,46 @@ descriptor only (DESC_WIDTH int32s) — no weight or cache re-staging — and
 runs ONE lockstep decode for all active slots (continuous batching with
 static shapes).
 
-The engine is a *client of the shared Dispatcher*: both ``decode`` and
-``insert`` are opcodes in the runtime's work table, and every step flows
-submit → ticket → trigger → retire → resolve through the dispatcher's EDF
-queue and mailbox record. Each submission's ``Ticket`` future carries its
-own result — the engine never scans a shared completion list, so a
-long-running server's dispatcher memory stays O(completion window).
-Prefill runs host-side (one jit per prompt length), then its result is
-staged into runtime state via the public ``PersistentRuntime.update_state``
-and consumed on device by an OP_INSERT step — no private-attribute pokes.
+The engine is a *client of the shared Dispatcher*: ``decode``, ``insert``,
+``prefill`` (when chunked) and ``release`` are opcodes in the runtime's
+work table, and every step flows submit → ticket → trigger → retire →
+resolve through the dispatcher's EDF queue and mailbox record. Each
+submission's ``Ticket`` future carries its own result — the engine never
+scans a shared completion list, so a long-running server's dispatcher
+memory stays O(completion window).
+
+Staging is PER-SLOT: the prefill→decode handoff area holds one batch-row
+per engine slot (prompt, evolving batch-1 caches, first token, length — all
+keyed by slot index), so any number of prefills may be outstanding at once
+and ``add_request`` returns at SUBMISSION time. The OP_INSERT step that
+copies a finished prefill's staging row into the main caches is chained
+onto the prefill ticket's ``on_complete`` — no host thread ever blocks on
+its own prefill, and decode steps submitted in between overlap it freely
+(per-slot staging is what makes the interleaving safe: a decode step
+touches only the main caches, a prefill chunk touches only its own staging
+row).
+
+Prefill runs host-side by default (one jit per prompt length), staged into
+the slot's staging row via the public ``PersistentRuntime.update_state``.
 With ``chunked_prefill=True`` the prompt instead runs device-side as a
 CHUNKED OP_PREFILL item — ``ceil(L / prefill_chunk_tokens)`` resumable
 chunks through the dispatcher, each a preemption point — so a long
 prefill no longer occupies its cluster atomically: work already queued
-on a SHARED dispatcher (another tenant's decode, another engine) cuts in
-at every chunk boundary, the declared ``chunk_us`` collapses admission's
-blocking term from "one whole prompt" to one chunk, and budget charging
-happens per chunk. Note the limit of the single-threaded engine itself:
-the single-entry staging area forces ``add_request`` to resolve the
-prefill ticket before returning, so THIS engine's own decode steps never
-overlap its own prefill — per-slot staging (prompt/caches keyed by slot)
-is the designed follow-up that would let prefill tickets stay
-outstanding across ``step()`` calls.
+on a SHARED dispatcher (another tenant's decode, another engine, or THIS
+engine's own deadline-carrying decode steps) cuts in at every chunk
+boundary, the declared ``chunk_us`` collapses admission's blocking term
+from "one whole prompt" to one chunk, and budget charging happens per
+chunk.
+
+Slot lifecycle is explicit (``kv_cache`` phases): ``add_request`` binds a
+slot in phase ``prefill``; the chained insert's resolution flips it to
+``decoding`` (and records the first generated token); ``step`` harvests
+only ``decoding`` slots, so a decode step that raced ahead of a pending
+insert on device can never be misread as that slot's token. OP_RELEASE
+deactivates a slot device-side without a host→device state rebuild — the
+stream frontend uses it to evict shed streams and to close finished ones
+(``step(auto_free=False)`` parks them in phase ``finished`` instead of
+freeing host-side immediately).
 
 Phases feed the WcetTracker: Init = boot/compile, Trigger = descriptor
 dispatch, Wait = block_until_ready — directly comparable to paper Tables
@@ -45,17 +63,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mailbox as mb
-from repro.core.dispatcher import Dispatcher
+from repro.core.dispatcher import Dispatcher, Ticket
 from repro.core.persistent import PersistentRuntime
 from repro.core.sched import (CRIT_HIGH, CRIT_LOW, BudgetedServerPolicy,
                               ClassSpec, SchedPolicy)
 from repro.core.telemetry import EV_ENGINE, TraceCollector
 from repro.core.wcet import WcetTracker
-from repro.serving.kv_cache import SlotManager, insert_slot_caches
+from repro.serving.kv_cache import (PH_DECODING, PH_FINISHED, SlotManager,
+                                    extract_slot_caches, insert_slot_caches)
 
 OP_DECODE = 0
 OP_INSERT = 1
 OP_PREFILL = 2          # present only when chunked_prefill=True
+# OP_RELEASE is always the LAST opcode in the work table — read it from
+# ``engine.op_release`` (2 without chunked prefill, 3 with).
 
 # Decode is the latency-critical class: HIGH criticality (it may shed
 # queued LOW work under overload) and — under the budgeted-server policy —
@@ -117,24 +138,27 @@ class ServingEngine:
         # own a private copy: engine state is donated through every step /
         # insert, which would otherwise invalidate the caller's param buffers
         params = jax.tree.map(jnp.array, params)
+        # PER-SLOT prefill→decode handoff area: one staging row per engine
+        # slot (batch-1 caches at the slot's batch index, first token,
+        # prompt length — plus the staged prompt itself when prefill runs
+        # device-side). Any number of prefills can be outstanding at once;
+        # OP_INSERT copies row ``slot`` into the main caches on device.
         staging = {
-            "caches": model.init_caches(1, max_seq),
-            "token": jnp.zeros((), jnp.int32),
-            "length": jnp.zeros((), jnp.int32),
+            "caches": model.init_caches(max_batch, max_seq),
+            "token": jnp.zeros((max_batch,), jnp.int32),
+            "length": jnp.zeros((max_batch,), jnp.int32),
         }
         if self.chunked_prefill:
-            # device-side prefill reads the prompt from state; the host
+            # device-side prefill reads its prompt row from state; the host
             # stages it once per request (max_seq int32s — tiny next to
             # the caches it saves re-staging)
-            staging["prompt"] = jnp.zeros((max_seq,), jnp.int32)
+            staging["prompt"] = jnp.zeros((max_batch, max_seq), jnp.int32)
         state = {
             "params": params,
             "caches": caches,
             "tokens": jnp.zeros((max_batch, 1), jnp.int32),
             "lengths": jnp.zeros((max_batch,), jnp.int32),
             "active": jnp.zeros((max_batch,), jnp.bool_),
-            # prefill → decode handoff area: one batch-1 cache tree plus the
-            # first generated token; OP_INSERT copies it into a slot on device
             "staging": staging,
         }
 
@@ -153,57 +177,85 @@ class ServingEngine:
         def insert_fn(state, desc):
             slot = desc[mb.W_ARG0]
             stg = state["staging"]
-            caches = insert_slot_caches(state["caches"], stg["caches"], slot)
+            small = extract_slot_caches(stg["caches"], slot)
+            caches = insert_slot_caches(state["caches"], small, slot)
+            tok = jax.lax.dynamic_slice(stg["token"], (slot,), (1,))
             tokens = jax.lax.dynamic_update_slice(
-                state["tokens"], stg["token"].reshape(1, 1), (slot, 0))
+                state["tokens"], tok.reshape(1, 1), (slot, 0))
+            length = jax.lax.dynamic_slice(stg["length"], (slot,), (1,))
             lengths = jax.lax.dynamic_update_slice(
-                state["lengths"], stg["length"].reshape(1), (slot,))
+                state["lengths"], length, (slot,))
             active = jax.lax.dynamic_update_slice(
                 state["active"], jnp.ones((1,), jnp.bool_), (slot,))
             new_state = dict(state, caches=caches, tokens=tokens,
                              lengths=lengths, active=active)
-            return new_state, jnp.zeros((max_batch,), jnp.int32)
+            # the result is the post-insert token column: row ``slot`` is
+            # the request's FIRST generated token, so the insert ticket's
+            # completion carries it (TTFT measurement, host records)
+            return new_state, tokens[:, 0]
+
+        def release_fn(state, desc):
+            # deactivate a slot device-side (shed / end-of-stream): decode
+            # steps stop writing its row; the slot's caches are left as-is
+            # and fully overwritten by the next insert that lands there
+            slot = desc[mb.W_ARG0]
+            active = jax.lax.dynamic_update_slice(
+                state["active"], jnp.zeros((1,), jnp.bool_), (slot,))
+            return dict(state, active=active), jnp.zeros(
+                (max_batch,), jnp.int32)
 
         chunk_tokens = self.prefill_chunk_tokens
 
         def prefill_fn(state, carry, desc):
-            # chunk-aware (resumable) prefill: chunk k folds tokens
-            # [k·chunk_tokens, ...) of the staged prompt through
-            # decode_step on the batch-1 staging caches — mathematically
-            # the prompt pass, sliced so decode work can preempt between
-            # chunks instead of waiting out the whole prompt. The carry
-            # holds the last sampled token; the evolving caches live in
-            # state["staging"] (chunk 0 resets them), so the remainder is
-            # re-triggerable from the descriptor's chunk word alone.
+            # chunk-aware (resumable) prefill against the slot's OWN
+            # staging row: chunk k folds tokens [k·chunk_tokens, ...) of
+            # the staged prompt row through decode_step on the row's
+            # batch-1 caches — mathematically the prompt pass, sliced so
+            # more urgent work can preempt between chunks instead of
+            # waiting out the whole prompt. Chunk 0 zeroes the row; the
+            # running last-sampled token lives in staging["token"][slot],
+            # so the remainder is re-triggerable from the descriptor's
+            # chunk word alone and other slots' prefills may interleave
+            # arbitrarily without clobbering each other.
             stg = state["staging"]
+            slot = desc[mb.W_ARG0]
             chunk = desc[mb.W_CHUNK]
             length = desc[mb.W_SEQLEN]
             start = chunk * chunk_tokens
+            row = extract_slot_caches(stg["caches"], slot)
             caches0 = jax.tree.map(
-                lambda c: jnp.where(chunk == 0, jnp.zeros_like(c), c),
-                stg["caches"])
+                lambda c: jnp.where(chunk == 0, jnp.zeros_like(c), c), row)
+            prompt = jax.lax.dynamic_slice_in_dim(
+                stg["prompt"], slot, 1, axis=0)[0]
+            last0 = jax.lax.dynamic_slice(stg["token"], (slot,), (1,))[0]
             n = jnp.clip(length - start, 0, chunk_tokens)
 
             def body(i, acc):
                 caches, _ = acc
                 pos = start + i
-                tok = jax.lax.dynamic_slice(stg["prompt"], (pos,), (1,))
+                tok = jax.lax.dynamic_slice(prompt, (pos,), (1,))
                 logits, caches = model.decode_step(
                     state["params"], caches, tok[:, None],
                     jnp.reshape(pos, (1,)))
                 return caches, jnp.argmax(logits[0, 0]).astype(jnp.int32)
 
-            caches, last = jax.lax.fori_loop(0, n, body, (caches0, carry))
+            caches, last = jax.lax.fori_loop(0, n, body, (caches0, last0))
             done = chunk + 1 >= desc[mb.W_NCHUNKS]
-            new_stg = dict(stg, caches=caches, token=last,
-                           length=length.astype(jnp.int32))
-            return (dict(state, staging=new_stg), last,
+            new_caches = insert_slot_caches(stg["caches"], caches, slot)
+            token = jax.lax.dynamic_update_slice(
+                stg["token"], last.reshape(1), (slot,))
+            lens = jax.lax.dynamic_update_slice(
+                stg["length"], length.astype(jnp.int32).reshape(1), (slot,))
+            new_stg = dict(stg, caches=new_caches, token=token, length=lens)
+            return (dict(state, staging=new_stg), carry,
                     jnp.zeros((max_batch,), jnp.int32), done)
 
         work_fns = [("decode", decode_fn), ("insert", insert_fn)]
         if self.chunked_prefill:
             work_fns.append(("prefill", prefill_fn,
                              jnp.zeros((), jnp.int32)))
+        work_fns.append(("release", release_fn))
+        self.op_release = len(work_fns) - 1
         self.rt = PersistentRuntime(
             work_fns,
             result_template=jnp.zeros((max_batch,), jnp.int32),
@@ -215,10 +267,10 @@ class ServingEngine:
         self.rt.boot(state)
 
         # decode is HIGH-criticality and (under the server policy) runs in
-        # its own bandwidth server; insert is best-effort LOW; chunked
-        # prefill is LOW and DECLARES its chunk length, which is what
-        # collapses its blocking term so decode admission sees one chunk,
-        # not one whole prompt
+        # its own bandwidth server; insert/release are best-effort LOW;
+        # chunked prefill is LOW and DECLARES its chunk length, which is
+        # what collapses its blocking term so decode admission sees one
+        # chunk, not one whole prompt
         class_specs = (
             ClassSpec(opcode=OP_DECODE, name="decode", priority=0,
                       criticality=CRIT_HIGH, budget_us=decode_budget_us,
@@ -231,6 +283,9 @@ class ServingEngine:
                 ClassSpec(opcode=OP_PREFILL, name="prefill", priority=5,
                           criticality=CRIT_LOW,
                           chunk_us=prefill_chunk_us),)
+        class_specs += (
+            ClassSpec(opcode=self.op_release, name="release", priority=10,
+                      criticality=CRIT_LOW),)
         if dispatcher is None:
             if policy == "server":
                 # decode dominates this cluster: budget isolation should
@@ -260,23 +315,31 @@ class ServingEngine:
                                        donate_argnums=(0,))
         self._prefill_jits: dict[int, Any] = {}
         self._step_counter = 0
+        # outstanding prefill tickets per slot (stream frontends cancel
+        # these when shedding a still-queued prefill)
+        self.prefill_tickets: dict[int, Ticket] = {}
 
     # ------------------------------------------------------------------
     @staticmethod
-    def _stage_impl(state, slot_caches, first_token, length):
-        stg = dict(
-            state["staging"],
-            caches=jax.tree.map(lambda t, c: c.astype(t.dtype),
-                                state["staging"]["caches"], slot_caches),
-            token=first_token.astype(jnp.int32).reshape(()),
-            length=length.astype(jnp.int32).reshape(()),
-        )
-        return dict(state, staging=stg)
+    def _stage_impl(state, slot_caches, first_token, length, slot):
+        stg = state["staging"]
+        caches = jax.tree.map(
+            lambda big, c: jax.lax.dynamic_update_slice_in_dim(
+                big, c.astype(big.dtype), slot, axis=1),
+            stg["caches"], slot_caches)
+        token = jax.lax.dynamic_update_slice(
+            stg["token"], first_token.astype(jnp.int32).reshape(1), (slot,))
+        lens = jax.lax.dynamic_update_slice(
+            stg["length"], length.astype(jnp.int32).reshape(1), (slot,))
+        return dict(state, staging=dict(stg, caches=caches, token=token,
+                                        length=lens))
 
     @staticmethod
-    def _set_prompt_impl(state, prompt):
-        stg = dict(state["staging"], prompt=prompt.astype(jnp.int32))
-        return dict(state, staging=stg)
+    def _set_prompt_impl(state, prompt, slot):
+        stg = state["staging"]
+        prompts = jax.lax.dynamic_update_slice(
+            stg["prompt"], prompt.astype(jnp.int32)[None], (slot, 0))
+        return dict(state, staging=dict(stg, prompt=prompts))
 
     def _prefill(self, batch: dict, length: int):
         # exact-length prefill: one compile per distinct prompt length.
@@ -299,16 +362,47 @@ class ServingEngine:
         return out
 
     # ------------------------------------------------------------------
+    def _submit_insert(self, request_id: int, slot: int,
+                       slot_obj) -> Ticket:
+        """Submit the staging→main-cache OP_INSERT for ``slot`` and chain
+        the host-side bookkeeping onto its resolution: the slot flips to
+        phase ``decoding`` and records its first generated token (the
+        insert result's row ``slot``). Holding the Slot OBJECT (not the
+        index) keeps the callback safe across slot reuse."""
+        ticket = self.dispatcher.submit(
+            mb.WorkDescriptor(opcode=OP_INSERT, arg0=slot,
+                              request_id=request_id),
+            cluster=self.cluster, admission=False)
+        tc = self.dispatcher.telemetry
+
+        def _on_insert(comp, slot=slot, slot_obj=slot_obj):
+            slot_obj.generated.append(int(np.asarray(comp.result)[slot]))
+            slot_obj.phase = PH_DECODING
+            if tc is not None:
+                tc.emit(EV_ENGINE, cluster=self.cluster,
+                        request_id=comp.request_id, phase="insert",
+                        slot=slot)
+
+        ticket.on_complete(_on_insert)
+        return ticket
+
     def add_request(self, request_id: int, prompt: np.ndarray,
                     max_new_tokens: int = 32,
                     extras: Optional[dict] = None) -> Optional[int]:
         """Prefill a prompt into a free slot. Returns the slot or None.
 
-        With ``chunked_prefill`` the prompt runs DEVICE-side as a chunked
+        NON-BLOCKING: the call returns at submission time. With
+        ``chunked_prefill`` the prompt runs DEVICE-side as a chunked
         OP_PREFILL item (``ceil(L / prefill_chunk_tokens)`` resumable
-        chunks through the normal dispatcher lane — decode work can
-        preempt it at every chunk boundary); prompts that need ``extras``
-        (VLM/enc-dec) fall back to the host prefill path.
+        chunks through the normal dispatcher lane — deadline-carrying
+        work preempts it at every chunk boundary) and the OP_INSERT is
+        chained onto the prefill ticket's resolution, so this engine's
+        own decode steps overlap its own prefills. Prompts that need
+        ``extras`` (VLM/enc-dec) fall back to the host prefill path,
+        which pays its compute here but still hands off asynchronously.
+        The slot is harvestable (phase ``decoding``, first token
+        recorded) once the insert resolves — drive the dispatcher via
+        ``step()`` / a ticket ``result()``.
         """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         L = int(prompt.shape[0])
@@ -318,29 +412,32 @@ class ServingEngine:
             request_id, L, min(L + max_new_tokens - 1, self.max_seq - 1))
         if slot is None:
             return None
+        slot_obj = self.slots.slots[slot]
+        chunked = self.chunked_prefill and not extras
         tc = self.dispatcher.telemetry   # engine-owned or shared collector
         if tc is not None:
             tc.emit(EV_ENGINE, cluster=self.cluster, request_id=request_id,
                     phase="add_request", slot=slot, prompt_tokens=L,
-                    path="chunked" if self.chunked_prefill and not extras
-                    else "host")
-        if self.chunked_prefill and not extras:
+                    path="chunked" if chunked else "host")
+        if chunked:
             buf = np.zeros((self.max_seq,), np.int32)
             buf[:L] = prompt
             self.rt.update_state(self._set_prompt_jit(
-                self.rt.state, jnp.asarray(buf)))
+                self.rt.state, jnp.asarray(buf),
+                jnp.asarray(slot, jnp.int32)))
             n_chunks = -(-L // self.prefill_chunk_tokens)
             ticket = self.dispatcher.submit(
                 mb.WorkDescriptor(opcode=OP_PREFILL, arg0=slot, seq_len=L,
                                   request_id=request_id,
                                   n_chunks=n_chunks),
                 cluster=self.cluster, admission=False)
-            # staging (prompt + evolving caches) is single-entry, exactly
-            # like the host path below: resolve before the next request
-            # may overwrite it
-            ticket.result()
-            first = jnp.asarray(self.rt.state["staging"]["token"])
-            self.slots.slots[slot].generated.append(int(first))
+            self.prefill_tickets[slot] = ticket
+
+            def _chain(_comp, rid=request_id, slot=slot, slot_obj=slot_obj):
+                self.prefill_tickets.pop(slot, None)
+                self._submit_insert(rid, slot, slot_obj)
+
+            ticket.on_complete(_chain)
         else:
             batch = {"tokens": jnp.asarray(prompt[None])}
             if extras:
@@ -348,42 +445,65 @@ class ServingEngine:
                               for k, v in extras.items()})
             logits, caches = self._prefill(batch, L)
             first = jnp.argmax(logits[0, -1, :]).astype(jnp.int32)
-            self.slots.slots[slot].generated.append(int(first))
             self.rt.update_state(self._stage_jit(
-                self.rt.state, caches, first, jnp.asarray(L, jnp.int32)))
-        ticket = self.dispatcher.submit(
-            mb.WorkDescriptor(opcode=OP_INSERT, arg0=slot,
-                              request_id=request_id),
-            cluster=self.cluster, admission=False)
-        # the staging area is single-entry: the insert must be *triggered*
-        # (its step has captured the staged tree) before the next prefill
-        # may overwrite it — resolving the ticket (retire) keeps step()
-        # simple and the staging hand-off race-free
-        ticket.result()
+                self.rt.state, caches, first, jnp.asarray(L, jnp.int32),
+                jnp.asarray(slot, jnp.int32)))
+            if tc is not None:
+                # the host-fallback admission path, visible in traces:
+                # which slot the host prefill bound and that it bypassed
+                # the chunked device lane
+                tc.emit(EV_ENGINE, cluster=self.cluster,
+                        request_id=request_id, phase="host_prefill",
+                        slot=slot, path="host", prompt_tokens=L)
+            self._submit_insert(request_id, slot, slot_obj)
         return slot
 
+    def release_slot(self, slot: int, request_id: int = -1) -> Ticket:
+        """Deactivate ``slot`` device-side (OP_RELEASE): decode steps stop
+        writing its row. The HOST record is intentionally untouched — free
+        or evict it when the returned ticket resolves, so the slot cannot
+        be reallocated while a decode step that predates the release is
+        still in flight."""
+        return self.dispatcher.submit(
+            mb.WorkDescriptor(opcode=self.op_release, arg0=slot,
+                              request_id=request_id),
+            cluster=self.cluster, admission=False)
+
     # ------------------------------------------------------------------
-    def step(self) -> dict[int, int]:
+    def step(self, deadline_us: int = 0,
+             auto_free: bool = True) -> dict[int, int]:
         """One persistent decode step through the dispatcher; returns
-        {slot: new_token} for active slots, frees finished slots. The
-        step's ticket delivers exactly this request's result — no
-        completion-list scanning."""
+        {slot: new_token} for DECODING slots (a slot whose insert has not
+        resolved yet produced no real token and is skipped). The step's
+        ticket delivers exactly this request's result — no completion-list
+        scanning.
+
+        ``deadline_us`` gives the step a real EDF deadline so it preempts
+        deadline-free chunked prefills at their next chunk boundary (the
+        stream frontend's decode/prefill interleave). ``auto_free=False``
+        parks exhausted slots in phase ``finished`` instead of freeing
+        them — callers that must release the slot device-side first (the
+        frontend) own the free."""
         desc = mb.WorkDescriptor(work_id=self._step_counter % 1024,
                                  opcode=OP_DECODE,
-                                 request_id=self._step_counter)
+                                 request_id=self._step_counter,
+                                 deadline_us=deadline_us)
         self._step_counter += 1
         ticket = self.dispatcher.submit(desc, cluster=self.cluster,
                                         admission=False)
         toks = np.asarray(ticket.result())
         out = {}
-        for i in self.slots.active_indices():
+        for i in self.slots.decoding_indices():
             s = self.slots.slots[i]
             t = int(toks[i])
             s.generated.append(t)
             s.length += 1
             out[i] = t
             if t == self.eos_id or s.length >= s.max_len:
-                self.slots.free(i)
+                if auto_free:
+                    self.slots.free(i)
+                else:
+                    s.phase = PH_FINISHED
         return out
 
     # ------------------------------------------------------------------

@@ -1,0 +1,130 @@
+"""SlotManager lifecycle invariants + cache-tree slot isolation.
+
+The continuous-batching frontend trusts two properties absolutely:
+(1) the slot allocator never hands the same index to two live requests
+(host-side aliasing would interleave two streams' tokens), and
+(2) writing one slot's row of a batched cache tree never perturbs any
+other slot's row (device-side aliasing would corrupt a neighbour's KV
+state). Both are checked here — the first as a seeded randomized
+operation-sequence property test, the second at the jax level.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kv_cache import (PH_DECODING, PH_FREE, PH_PREFILL,
+                                    SlotManager, extract_slot_caches,
+                                    insert_slot_caches, zeros_like_slot)
+
+
+def test_random_walk_alloc_free_never_aliases_live_slots():
+    """Property test: under any interleaving of allocate/free/evict, the
+    live set and the free list stay a partition of the capacity — an
+    allocation can never return an index that is still live."""
+    rng = np.random.RandomState(1234)
+    for cap in (1, 2, 5):
+        sm = SlotManager(cap)
+        live: dict[int, int] = {}            # index -> generation
+        max_gen_seen = 0
+        for step in range(600):
+            op = rng.randint(3)
+            if op == 0:                       # allocate
+                i = sm.allocate(step, rng.randint(1, 8), 16)
+                if len(live) == cap:
+                    assert i is None          # full ⇒ must refuse
+                else:
+                    assert i is not None and i not in live
+                    gen = sm.slots[i].generation
+                    assert gen > max_gen_seen  # generations monotone
+                    max_gen_seen = gen
+                    live[i] = gen
+                    assert sm.slots[i].phase == PH_PREFILL
+            elif live:                        # free or evict a live slot
+                i = int(rng.choice(sorted(live)))
+                before = sm.evictions
+                if op == 1:
+                    sm.free(i)
+                else:
+                    sm.evict(i)
+                    assert sm.evictions == before + 1
+                del live[i]
+                assert sm.slots[i].phase == PH_FREE
+                with pytest.raises(ValueError):
+                    sm.free(i)                # double free always raises
+            # invariant: live ∪ free partitions [0, cap)
+            assert sm.free_count == cap - len(live)
+            assert set(sm.active_indices()) == set(live)
+
+
+def test_evicted_slot_returns_to_free_list_and_is_reusable():
+    """Eviction of a shed stream's slot restores it to the free list:
+    the next allocation reuses it (FIFO) and the eviction is counted
+    separately from normal frees."""
+    sm = SlotManager(2)
+    a = sm.allocate(1, 3, 16)
+    b = sm.allocate(2, 3, 16)
+    assert sm.free_count == 0 and sm.allocate(3, 3, 16) is None
+    retired = sm.evict(a)
+    assert retired.request_id == 1            # caller keeps the record
+    assert sm.free_count == 1 and sm.evictions == 1
+    c = sm.allocate(3, 3, 16)
+    assert c == a                             # FIFO reuse of the evicted
+    assert sm.slots[c].request_id == 3
+    assert retired.request_id == 1            # old record not mutated
+    sm.free(b)
+    sm.free(c)
+    assert sm.free_count == 2 and sm.evictions == 1
+
+
+def test_decoding_indices_filters_by_phase():
+    sm = SlotManager(3)
+    a = sm.allocate(1, 2, 8)
+    b = sm.allocate(2, 2, 8)
+    assert sm.decoding_indices() == []        # both still prefilling
+    sm.set_phase(b, PH_DECODING)
+    assert sm.decoding_indices() == [b]
+    sm.set_phase(a, PH_DECODING)
+    assert sorted(sm.decoding_indices()) == sorted([a, b])
+    sm.free(a)
+    assert sm.decoding_indices() == [b]
+
+
+def _tree(batch):
+    """A two-leaf cache-like tree with batch at axis 1."""
+    return {"k": jnp.zeros((2, batch, 3), jnp.float32),
+            "v": jnp.zeros((1, batch, 2, 2), jnp.float32)}
+
+
+def test_slot_cache_writes_never_alias_other_rows():
+    """Write every slot's row with a distinct fill, in random order and
+    with interleaved overwrites: each row reads back exactly the LAST
+    value written to it — no write ever leaks into a neighbour."""
+    B = 4
+    big = _tree(B)
+    rng = np.random.RandomState(7)
+    expect = {s: 0.0 for s in range(B)}
+    order = list(rng.randint(0, B, size=20))
+    for n, s in enumerate(order, start=1):
+        small = jax.tree.map(lambda l: jnp.full(
+            l.shape[:1] + (1,) + l.shape[2:], float(n), l.dtype),
+            _tree(1))
+        big = insert_slot_caches(big, small, int(s))
+        expect[int(s)] = float(n)
+    for s in range(B):
+        row = extract_slot_caches(big, s)
+        for leaf in jax.tree.leaves(row):
+            assert leaf.shape[1] == 1
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.full(leaf.shape, expect[s]))
+
+
+def test_zeros_like_slot_zeroes_only_that_row():
+    B = 3
+    big = jax.tree.map(lambda l: jnp.ones_like(l), _tree(B))
+    big = zeros_like_slot(big, 1)
+    for s in range(B):
+        want = 0.0 if s == 1 else 1.0
+        for leaf in jax.tree.leaves(extract_slot_caches(big, s)):
+            np.testing.assert_array_equal(np.asarray(leaf),
+                                          np.full(leaf.shape, want))

@@ -62,7 +62,10 @@ def test_wcet_phases_tracked():
     stats = eng.tracker.report()
     assert stats["init"]["count"] == 1
     assert stats["trigger"]["count"] >= 2
-    assert stats["wait"]["count"] == stats["trigger"]["count"]
+    # non-blocking add_request lets the kick pass coalesce insert+decode
+    # into one batched doorbell: one trigger phase may cover several
+    # retirements, so waits bound triggers from above
+    assert stats["wait"]["count"] >= stats["trigger"]["count"]
     eng.dispose()
 
 
