@@ -1,0 +1,201 @@
+"""Contention-aware elastic recarve under live skewed load.
+
+The scenario the elastic controller exists for: a static carve that is
+WRONG for the offered load. Four clusters on one physical device, two
+classes, and an 80/20 HIGH-skewed arrival mix pointed at a carve that
+gives HIGH one cluster and LOW three. Because every cluster multiplexes
+onto the same device, a class's throughput share IS its cluster share —
+so the backlogged HIGH class drowns in queueing delay until the
+controller observes the demand split, re-runs the admission analyses,
+and recarves to HIGH=3/LOW=1 while the stream keeps flowing.
+
+Rows:
+  elastic_recarve_speedup    — HIGH-class p99 response before / after the
+                               controller's live recarve (floor: 1.5x)
+  elastic_repin_stall_us     — wall time of the controller's carve change
+                               itself (pin rewrite, no reboot)
+  elastic_recarve_stall_us   — wall time of a GROWING recarve (4 -> 6
+                               clusters): bounded by warm-pool reboot +
+                               executable-cache hits, not cold lk_init —
+                               the cold single-runtime boot is measured
+                               alongside for the ratio
+  elastic_bound_violations   — BoundMonitor violations across the carve
+                               changes (MUST be 0: a recarve never breaks
+                               an admitted bound)
+  elastic_exec_cache_hits    — compiled-executable reuse across the fleet
+  elastic_tickets_lost       — submitted minus resolved (MUST be 0)
+
+Standalone: ``python benchmarks/bench_elastic.py [--smoke] [out.json]``
+writes the rows in the BENCH record format (CI smoke artifact); the
+module also registers in benchmarks/run.py so full runs fold these rows
+into the auto-numbered BENCH_<n>.json trajectory.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.elastic import ElasticController
+from repro.core.persistent import PersistentRuntime, reap_deferred
+from repro.core.sched import CRIT_HIGH
+from repro.core.telemetry import EV_RESOLVE, TraceCollector
+from repro.core.telemetry.events import now_us
+from repro.system import LkSystem, WorkClass
+
+DIM = 64
+WCET_US = 2000.0
+DEADLINE_SLACK_US = 3_000_000
+
+
+def _work(state, desc):
+    x = state["x"]
+    for _ in range(2):
+        x = jnp.tanh(x @ state["w"])
+    state = dict(state, x=x)
+    return state, x[0, :1]
+
+
+def _state(cl=None):
+    rng = np.random.default_rng(7)
+    return {"x": jnp.asarray(rng.normal(size=(DIM, DIM)) * 0.1,
+                             jnp.float32),
+            "w": jnp.asarray(rng.normal(size=(DIM, DIM)) * 0.1,
+                             jnp.float32)}
+
+
+def _phase(sys_, rng, n_hi, submit_t, lo_refill=4):
+    """Drive the 80/20 skewed mix: ~2 HIGH submissions per pump round
+    (deadline-admitted) against a LOW backlog kept topped up so LOW's
+    clusters stay busy the whole phase — the competitive regime where a
+    class's cluster share is its service share."""
+    hi, lo_live = [], []
+    while len(hi) < n_hi or not all(t.done() for t in hi):
+        for _ in range(2):
+            if len(hi) < n_hi:
+                t = sys_.submit("hi",
+                                deadline_us=now_us() + DEADLINE_SLACK_US)
+                submit_t[t.request_id] = now_us()
+                hi.append(t)
+        lo_live = [t for t in lo_live if not t.done()]
+        while len(lo_live) < lo_refill:
+            lo_live.append(sys_.submit("lo"))
+        for c in list(sys_.dispatcher.runtimes):
+            sys_.dispatcher.kick(c)        # fill every pipeline…
+        sys_.poll()                        # …retire what finished
+    return hi, lo_live
+
+
+def _p99(ids, submit_t, resolve_t):
+    lat = [resolve_t[r] - submit_t[r] for r in ids if r in resolve_t]
+    return float(np.percentile(np.asarray(lat, np.float64), 99)), len(lat)
+
+
+def run(smoke: bool = False) -> list[str]:
+    n_hi = 16 if smoke else 60
+    dev = jax.devices()[0]
+    collector = TraceCollector()
+    rng = np.random.default_rng(0)
+    sys_ = LkSystem(
+        devices=[dev] * 8, n_clusters=4, warm_pool=2,
+        state_factory=_state, result_template=jnp.zeros((1,), jnp.float32),
+        telemetry=collector,
+        work_classes=[
+            WorkClass("hi", fn=_work, wcet_us=WCET_US,
+                      criticality=CRIT_HIGH),
+            WorkClass("lo", fn=_work, wcet_us=WCET_US)]).boot()
+    submit_t: dict[int, int] = {}
+    try:
+        # the deliberately wrong static carve: HIGH pinned to ONE cluster
+        sys_.apply_shares({"hi": 1, "lo": 3})
+
+        # phase A — static carve under the skewed mix
+        hi_a, _ = _phase(sys_, rng, n_hi, submit_t)
+        sys_.drain()
+
+        # phase B — same mix, elastic controller closing the loop
+        ctrl = ElasticController(interval_us=0, sustain=2,
+                                 cooldown_us=50_000)
+        sys_.elastic = ctrl
+        ctrl.bind(sys_)
+        hi_b, lo_live = _phase(sys_, rng, n_hi, submit_t)
+        repin_stall = sys_.recarve_stall_us
+        sys_.drain()
+
+        resolve_t = {e.request_id: e.t_us
+                     for e in collector.events_of(EV_RESOLVE)}
+        p99_a, n_a = _p99([t.request_id for t in hi_a],
+                          submit_t, resolve_t)
+        p99_b, n_b = _p99([t.request_id for t in hi_b],
+                          submit_t, resolve_t)
+        lost = sum(1 for t in hi_a + hi_b if not t.done())
+        shares = ctrl.share_history[0][1] if ctrl.share_history else {}
+
+        # a GROWING recarve (4 -> 6 clusters): new partitions boot from
+        # the warm pool + executable cache instead of paying cold lk_init
+        sys_.apply_shares({"hi": 4, "lo": 2})
+        grow_stall = sys_.recarve_stall_us
+        sys_.drain()
+        s = sys_.stats()
+
+        t0 = time.perf_counter()
+        cold = PersistentRuntime([("hi", _work), ("lo", _work)],
+                                 result_template=jnp.zeros((1,),
+                                                           jnp.float32))
+        cold.boot(_state())
+        cold_us = (time.perf_counter() - t0) * 1e6
+        cold.dispose()
+        reap_deferred()
+
+        bv = collector.monitor.counts()["bound_violations"]
+        rows = [
+            f"elastic_recarve_speedup,{p99_a / max(p99_b, 1.0):.2f},"
+            f"p99_before_us={p99_a:.0f},p99_after_us={p99_b:.0f},"
+            f"applied={ctrl.applied},hi_share=1to{shares.get('hi', '?')}",
+            f"elastic_repin_stall_us,{repin_stall:.0f},pins_only",
+            f"elastic_recarve_stall_us,{grow_stall:.0f},grow=4to6,"
+            f"warm_boots={s['warm_boots']},cold_init_us={cold_us:.0f},"
+            f"vs_cold={cold_us / max(grow_stall, 1.0):.1f}x",
+            f"elastic_bound_violations,{bv},must_be_0,"
+            f"hi_admitted={n_a + n_b}",
+            f"elastic_exec_cache_hits,{s['exec_cache_hits']},"
+            f"misses={s['exec_cache_misses']}",
+            f"elastic_tickets_lost,{lost},must_be_0,"
+            f"hi_submitted={len(hi_a) + len(hi_b)}",
+        ]
+    finally:
+        sys_.dispose()
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+    import sys
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path", nargs="?", default=None)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
+    print("name,us_per_call,derived")
+    records = []
+    for row in run(smoke=args.smoke):
+        print(row, flush=True)
+        parts = row.split(",")
+        try:
+            us = float(parts[1])
+        except (IndexError, ValueError):
+            us = None
+        records.append({"name": parts[0], "us_per_call": us,
+                        "derived": ",".join(parts[2:])})
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(records, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(records)} rows to {args.json_path}",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

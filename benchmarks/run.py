@@ -13,6 +13,10 @@
 #   bench_serving     -> continuous-batching stream frontend: per-stream
 #                        TTFT/response percentiles, HIGH bound violations,
 #                        shed/re-admit counts, decode/prefill overlap
+#   bench_elastic     -> contention-aware elastic recarve: p99 of the
+#                        backlogged class before/after a live repartition,
+#                        recarve stall (warm-pool reboot vs cold lk_init),
+#                        admitted-bound violations across the carve change
 #   bench_kernels     -> flash-vs-masked attention, executor dispatch rate
 #
 # ``--smoke`` is the CI fast path: every module runs with reduced reps so
@@ -73,7 +77,12 @@ def _row_record(row: str, prev: dict[str, float] | None = None) -> dict:
     except ValueError:
         us = None
     derived = ",".join(parts[2:]) if len(parts) > 2 else ""
-    if prev and name.endswith("_speedup") and name in prev:
+    # ``*_speedup`` rows always carry their trajectory; the lk_dispose
+    # rows carry it too as a regression note — PR 8 moved the blocking
+    # teardown off the dispose hot path (deferred to ``reap``), and the
+    # prev= tag is what shows the ~1890µs -> O(µs) drop in-band
+    if prev and name in prev and (name.endswith("_speedup")
+                                  or name.endswith("_lk_dispose")):
         tag = f"prev={prev[name]:g}"
         derived = f"{derived},{tag}" if derived else tag
     return {"name": name, "us_per_call": us, "derived": derived}
@@ -91,14 +100,14 @@ def main(argv=None) -> None:
     explicit_json = args.json_path is not None
     if args.json_path is None:
         args.json_path = default_json_path()
-    from benchmarks import (bench_dispatch, bench_kernels, bench_serving,
-                            bench_throughput)
+    from benchmarks import (bench_dispatch, bench_elastic, bench_kernels,
+                            bench_serving, bench_throughput)
     prev = _prev_values()
     print("name,us_per_call,derived")
     records = []
     failures = 0
     for mod in (bench_dispatch, bench_throughput, bench_serving,
-                bench_kernels):
+                bench_elastic, bench_kernels):
         try:
             for row in mod.run(smoke=args.smoke):
                 rec = _row_record(row, prev)

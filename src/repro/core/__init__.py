@@ -6,14 +6,16 @@ from repro.core.clusters import Cluster, ClusterManager, make_cluster_mesh
 from repro.core.dispatcher import (AdmissionError, AllClustersFailed,
                                    Completion, Dispatcher, Ticket,
                                    TicketCancelled)
-from repro.core.persistent import (PersistentRuntime, RuntimeProtocol,
-                                   TraditionalRuntime)
+from repro.core.elastic import ElasticController
+from repro.core.persistent import (ExecutableCache, PersistentRuntime,
+                                   RuntimeProtocol, TraditionalRuntime)
 from repro.core.system import LkSystem, WorkClass
 from repro.core.wcet import WcetTracker
 
 __all__ = [
     "mailbox", "Cluster", "ClusterManager", "make_cluster_mesh",
     "AdmissionError", "AllClustersFailed", "Completion", "Dispatcher",
+    "ElasticController", "ExecutableCache",
     "Ticket", "TicketCancelled", "LkSystem", "WorkClass",
     "PersistentRuntime", "RuntimeProtocol", "TraditionalRuntime",
     "WcetTracker",

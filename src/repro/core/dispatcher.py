@@ -316,7 +316,15 @@ class Dispatcher:
         self._service_sum_us = 0.0
         self._service_worst_us = 0.0
         self._seq = itertools.count()
-        self._pins: dict[str, int] = {}
+        # request-class → tuple of clusters: placement picks the least-
+        # loaded member of the pinned SET (a 1-tuple is the classic fixed
+        # pin). The elastic controller rewrites these as carves shift.
+        self._pins: dict[str, tuple[int, ...]] = {}
+        # elastic repartition counters (bumped by LkSystem/Elastic-
+        # Controller, surfaced in deadline_stats like every other
+        # decision counter)
+        self.recarves = 0
+        self.recarve_rejected = 0
         # clusters draining toward retirement: excluded from auto-placement
         # and replay targeting (explicit cluster= submits still reach them)
         self._draining: set[int] = set()
@@ -378,6 +386,8 @@ class Dispatcher:
             "ack_mismatches": self.mailbox.ack_mismatches,
             "chunk_protocol_errors": self.chunk_protocol_errors,
             "failure_callback_errors": len(self.failure_callback_errors),
+            "recarves": self.recarves,
+            "recarve_rejected": self.recarve_rejected,
         }
 
     def counters(self) -> dict:
@@ -415,8 +425,22 @@ class Dispatcher:
         self._draining.discard(cluster)
         self.mailbox.clear(cluster)
 
-    def pin(self, request_class: str, cluster: int) -> None:
-        self._pins[request_class] = cluster
+    def pin(self, request_class: str, cluster) -> None:
+        """Pin a request class to one cluster (int) or a SET of clusters
+        (any iterable of ints): auto-placement for the class picks the
+        least-loaded member of the set. An empty iterable unpins."""
+        if isinstance(cluster, int):
+            self._pins[request_class] = (cluster,)
+            return
+        members = tuple(dict.fromkeys(int(c) for c in cluster))
+        if not members:
+            self._pins.pop(request_class, None)
+        else:
+            self._pins[request_class] = members
+
+    def pins(self) -> dict[str, tuple[int, ...]]:
+        """Snapshot of the current class → cluster-set pin map."""
+        return dict(self._pins)
 
     def quiesce(self, cluster: int) -> None:
         """Stop routing NEW work to a cluster (lame-duck retirement): it
@@ -534,7 +558,16 @@ class Dispatcher:
         Raises AdmissionError when the deadline cannot be met under
         worst-case estimates AND criticality shedding cannot make room."""
         if cluster is None and request_class is not None:
-            cluster = self._pins.get(request_class)
+            pinned = self._pins.get(request_class)
+            if pinned is not None:
+                # least-loaded member of the pinned set that is still
+                # registered and not draining (a mid-recarve pin may
+                # briefly name a lame-duck or departed cluster)
+                pool = [c for c in pinned if c in self.runtimes
+                        and c not in self._draining] or \
+                       [c for c in pinned if c in self.runtimes]
+                if pool:
+                    cluster = min(pool, key=self._load)
         if cluster is None:
             cluster = min(self._placement_pool(), key=self._load)
         if cluster not in self.runtimes:
@@ -1152,4 +1185,7 @@ class Dispatcher:
             # protocol discrepancies the operator must see in one place
             "ack_mismatches": self.mailbox.ack_mismatches,
             "chunk_protocol_errors": self.chunk_protocol_errors,
+            # elastic repartition outcomes (applied / refused-by-admission)
+            "recarves": self.recarves,
+            "recarve_rejected": self.recarve_rejected,
         }

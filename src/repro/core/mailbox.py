@@ -195,10 +195,17 @@ class Mailbox:
         self.ack_mismatches = 0
 
     def grow(self, n_clusters: int) -> None:
-        """Extend capacity to ``n_clusters`` rows (late cluster register)."""
+        """Extend capacity to ``n_clusters`` rows (late cluster register,
+        recarve generation bump). THE invariant every resize path leans
+        on — heal-loop and elastic recarve alike — is checked here, in
+        the one place capacity changes: existing clusters' in-flight
+        replay records (and their order) survive the bump untouched.
+        Losing one would turn the next failure replay into a lost
+        ticket."""
         extra = n_clusters - self.n
         if extra <= 0:
             return
+        before = [list(q) for q in self.inflight]
         self.to_gpu = np.vstack([self.to_gpu,
                                  np.tile(nop_descriptor(), (extra, 1))])
         fg = np.zeros((extra, DESC_WIDTH), np.int32)
@@ -206,6 +213,10 @@ class Mailbox:
         self.from_gpu = np.vstack([self.from_gpu, fg])
         self.inflight.extend(deque() for _ in range(extra))
         self.n = n_clusters
+        assert all(len(q) == len(b) and
+                   all(d is e for d, e in zip(q, b))
+                   for q, b in zip(self.inflight, before)), \
+            "Mailbox.grow() must preserve in-flight replay records"
 
     def post(self, cluster: int, desc: np.ndarray) -> None:
         self.to_gpu[cluster] = desc

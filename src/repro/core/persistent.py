@@ -73,6 +73,97 @@ from repro.core.telemetry import EV_RT_RETIRE, EV_RT_TRIGGER, TraceCollector
 from repro.core.wcet import WcetTracker
 
 
+def _tree_key(tree) -> tuple:
+    """Hashable structural fingerprint of a pytree: (treedef, per-leaf
+    (shape, dtype)). Two trees with equal keys compile to byte-identical
+    executables for the same program — the ExecutableCache's keying
+    primitive."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return (treedef,
+            tuple((jnp.shape(leaf), str(jnp.result_type(leaf)))
+                  for leaf in leaves))
+
+
+class ExecutableCache:
+    """Shared cache of compiled persistent-step executables.
+
+    A recarve boots fresh ``PersistentRuntime``s whose programs are
+    IDENTICAL to the ones just disposed — same work fns, same state/carry
+    shapes, same donate mode — yet each boot re-pays the full XLA
+    lower+compile (~184ms ``lk_init`` in BENCH_7). Compiled executables
+    are stateless (the traced program closes over nothing mutable), so
+    one cache shared across a fleet turns every post-first boot into a
+    dictionary hit. Keys fingerprint everything the trace depends on:
+    the ORIGINAL work-fn objects (pre-``_normalize_work_fn``: the
+    wrappers are per-runtime closures with fresh ids), the result
+    template, the state/carries tree structure + leaf shapes/dtypes, the
+    donate flag, ``DESC_WIDTH``, and — for the multi-step ring variant —
+    ``max_steps``. Runtimes with a mesh/shardings bypass the cache
+    (sharded lowering bakes in device placement).
+
+    Not thread-safe; callers share it from one dispatch loop
+    (``LkSystem`` passes one instance to every runtime it boots).
+    """
+
+    def __init__(self):
+        self._entries: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get_or_compile(self, key: tuple, compile_fn: Callable):
+        exe = self._entries.get(key)
+        if exe is not None:
+            self.hits += 1
+            return exe
+        self.misses += 1
+        exe = compile_fn()
+        self._entries[key] = exe
+        return exe
+
+    def counters(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
+
+
+# Teardown work handed off by ``dispose()`` — each entry is
+# ``(in_flight_blocks, (state, carries))`` whose blocking finalization
+# (drain + buffer deletes) runs in ``reap_deferred()`` instead of on the
+# dispose hot path. Bounded: past _DEFERRED_CAP entries, dispose reaps
+# inline so unreaped teardown can't grow without limit.
+_DEFERRED_TEARDOWN: list = []
+_DEFERRED_CAP = 16
+
+
+def reap_deferred() -> int:
+    """Finalize every teardown deferred by ``dispose()``: block until the
+    disposed runtimes' in-flight steps finish, then delete their device
+    buffers. Returns the number of runtimes finalized. Called from
+    ``LkSystem.reap()`` (and by dispose itself past the backstop cap);
+    safe to call any time, idempotent when nothing is pending."""
+    n = 0
+    while _DEFERRED_TEARDOWN:
+        # the third element holds the runtime's compiled executables:
+        # releasing a LAST executable reference runs a multi-ms XLA
+        # destructor, so that release lands here (with a shared
+        # ExecutableCache the cache still holds them and the drop is free)
+        blocks, trees, _executables = _DEFERRED_TEARDOWN.pop()
+        for blk in blocks:
+            jax.block_until_ready((blk.results, blk.acks))
+        for tree in trees:
+            if tree is None:
+                continue
+            for leaf in jax.tree.leaves(tree):
+                try:
+                    leaf.delete()
+                except Exception:   # donated/aliased leaves may be gone
+                    pass
+        n += 1
+    return n
+
+
 def _normalize_work_fn(fn: Callable) -> Callable:
     """Accept both work-fn generations: the chunk-aware
     ``fn(state, carry, desc) -> (state, carry, result, done)`` passes
@@ -202,12 +293,16 @@ class PersistentRuntime:
                  donate: Optional[bool] = None,
                  max_inflight: int = 2,
                  max_steps: int = 8,
-                 telemetry: Optional[TraceCollector] = None):
+                 telemetry: Optional[TraceCollector] = None,
+                 exec_cache: Optional[ExecutableCache] = None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
         if max_steps < 1:
             raise ValueError("max_steps must be >= 1")
         self.work_names = [entry[0] for entry in work_fns]
+        # the cache keys on the ORIGINAL fn objects: the normalized
+        # wrappers below are per-runtime closures with distinct identities
+        self._orig_fns = tuple(entry[1] for entry in work_fns)
         self._fns = [_normalize_work_fn(entry[1]) for entry in work_fns]
         self._carry_templates = [
             entry[2] if len(entry) > 2 else jnp.zeros((), jnp.int32)
@@ -217,6 +312,7 @@ class PersistentRuntime:
         self.mesh = mesh
         self._state_shardings = state_shardings
         self._donate = donate
+        self._exec_cache = exec_cache
         self._state = None
         self._carries = None
         self.max_inflight = int(max_inflight)
@@ -295,8 +391,21 @@ class PersistentRuntime:
         return state, carries, results, acks
 
     # ------------------------------------------------------------------
+    def _cache_key(self, variant: str, state, carries) -> tuple:
+        """ExecutableCache key for this runtime's ``variant`` program.
+        Fingerprints everything the traced computation depends on; two
+        runtimes with equal keys can share one compiled executable."""
+        return (variant, self._orig_fns, _tree_key(self._result_template),
+                _tree_key(state), _tree_key(carries), bool(self._donate),
+                mb.DESC_WIDTH,
+                self.max_steps if variant == "multi" else 0)
+
     def boot(self, state) -> None:
-        """Init phase: compile the persistent step and make state resident."""
+        """Init phase: compile the persistent step and make state resident.
+        With a shared ``exec_cache``, a runtime whose program fingerprint
+        was compiled before (same work fns / shapes / donate) skips the
+        XLA compile entirely — the warm-reboot path of an elastic
+        recarve."""
         with self.tracker.phase("init"):
             if self._donate is None:
                 # donation serializes dispatch on CPU (module docstring):
@@ -306,7 +415,6 @@ class PersistentRuntime:
             kwargs = {}
             if self._donate:
                 kwargs["donate_argnums"] = (0, 1)
-            fn = jax.jit(self._lk_step, **kwargs)
             desc0 = jnp.asarray(mb.nop_descriptor())
             if self.mesh is not None and self._state_shardings is not None:
                 state = jax.device_put(state, self._state_shardings)
@@ -318,26 +426,50 @@ class PersistentRuntime:
             # from the same object (LkSystem boots one per cluster)
             carries = jax.device_put(tuple(
                 jax.tree.map(jnp.array, t) for t in self._carry_templates))
-            self._compiled = fn.lower(state, carries, desc0).compile()
-            # the double buffer's device-side descriptor advance
-            self._advance = jax.jit(
-                lambda d: d.at[mb.W_CHUNK].add(1)).lower(desc0).compile()
+
+            def compile_step():
+                return jax.jit(self._lk_step, **kwargs).lower(
+                    state, carries, desc0).compile()
+
+            def compile_advance():
+                return jax.jit(
+                    lambda d: d.at[mb.W_CHUNK].add(1)).lower(
+                        desc0).compile()
+
+            if self._exec_cache is not None and self.mesh is None:
+                self._compiled = self._exec_cache.get_or_compile(
+                    self._cache_key("step", state, carries), compile_step)
+                self._advance = self._exec_cache.get_or_compile(
+                    ("advance", mb.DESC_WIDTH), compile_advance)
+            else:
+                self._compiled = compile_step()
+                # the double buffer's device-side descriptor advance
+                self._advance = compile_advance()
             self._state = state
             self._carries = carries
         self.status = mb.THREAD_NOP
 
     def _ensure_multi(self):
         """Compile the ring variant on first use — booting pays only the
-        single-step compile, batch users pay the scan compile once."""
+        single-step compile, batch users pay the scan compile once (per
+        shared cache when one is attached)."""
         if self._compiled_multi is None:
             kwargs = {}
             if self._donate:
                 kwargs["donate_argnums"] = (0, 1)
             ring0 = jnp.asarray(
                 np.tile(mb.nop_descriptor(), (self.max_steps, 1)))
-            self._compiled_multi = jax.jit(
-                self._lk_multi_step, **kwargs).lower(
+
+            def compile_multi():
+                return jax.jit(self._lk_multi_step, **kwargs).lower(
                     self._state, self._carries, ring0).compile()
+
+            if self._exec_cache is not None and self.mesh is None:
+                self._compiled_multi = self._exec_cache.get_or_compile(
+                    self._cache_key("multi", self._state, self._carries),
+                    compile_multi)
+            else:
+                self._compiled_multi = compile_multi()
         return self._compiled_multi
 
     # ------------------------------------------------------------------
@@ -521,25 +653,36 @@ class PersistentRuntime:
         self._state = new_state
 
     def dispose(self) -> None:
-        """Release device state (paper: Dispose phase). Drains in-flight."""
+        """Release device state (paper: Dispose phase) — O(µs).
+
+        The BLOCKING half of teardown (draining in-flight steps, deleting
+        device buffers leaf by leaf) is handed to the module-level
+        deferred list and finalized by :func:`reap_deferred` — typically
+        from ``LkSystem.reap()``, off the latency path. Dispose itself
+        only detaches: fields null out immediately (``state is None``,
+        ``status == THREAD_EXIT`` hold on return, as before), so a live
+        recarve's displaced runtimes stop serving in microseconds instead
+        of milliseconds. Past ``_DEFERRED_CAP`` unreaped teardowns, the
+        reap runs inline as a memory backstop."""
         with self.tracker.phase("dispose"):
-            while self._inflight:
-                blk = self._inflight.popleft()
-                jax.block_until_ready((blk.results, blk.acks))
+            held = (self._compiled, self._compiled_multi, self._advance)
+            if self._inflight or self._state is not None \
+                    or self._carries is not None \
+                    or any(x is not None for x in held):
+                _DEFERRED_TEARDOWN.append(
+                    (list(self._inflight), (self._state, self._carries),
+                     held))
+            self._inflight.clear()
             self._oldest_ready = False
             self._staged.clear()
-            if self._state is not None:
-                for leaf in jax.tree.leaves(self._state):
-                    leaf.delete()
-            if self._carries is not None:
-                for leaf in jax.tree.leaves(self._carries):
-                    leaf.delete()
             self._state = None
             self._carries = None
             self._compiled = None
             self._compiled_multi = None
             self._advance = None
         self.status = mb.THREAD_EXIT
+        if len(_DEFERRED_TEARDOWN) > _DEFERRED_CAP:
+            reap_deferred()
 
 
 class TraditionalRuntime:

@@ -41,9 +41,13 @@ from typing import Any, Callable, Optional, Sequence, Union
 from repro.core import mailbox as mb
 from repro.core.clusters import Cluster, ClusterManager
 from repro.core.dispatcher import Dispatcher, Ticket
-from repro.core.persistent import PersistentRuntime, RuntimeProtocol
+from repro.core.elastic import ElasticController, allocate_clusters
+from repro.core.persistent import (
+    ExecutableCache, PersistentRuntime, RuntimeProtocol, reap_deferred,
+)
 from repro.core.sched import CRIT_LOW, ClassSpec, SchedPolicy
-from repro.core.telemetry import EV_HEAL, TraceCollector
+from repro.core.telemetry import EV_HEAL, EV_RECARVE, TraceCollector
+from repro.core.telemetry.events import now_us
 
 
 @dataclass(frozen=True)
@@ -126,7 +130,10 @@ class LkSystem:
                  default_wcet_us: float = 1000.0,
                  preemptive: Optional[bool] = None,
                  telemetry: Optional[TraceCollector] = None,
-                 wcet_quantile: Optional[float] = None):
+                 wcet_quantile: Optional[float] = None,
+                 elastic: Optional[ElasticController] = None,
+                 warm_pool: int = 0,
+                 exec_cache: Optional[ExecutableCache] = None):
         self.cm = cluster_manager if cluster_manager is not None else \
             ClusterManager(devices=devices, n_clusters=n_clusters,
                            axis_names=axis_names,
@@ -159,6 +166,19 @@ class LkSystem:
         self._next_dispatch_id = itertools.count()
         self._req_ids = itertools.count(1)
         self.heals = 0
+        # elastic partitioning: controller + warm reboot machinery. One
+        # ExecutableCache is shared by every runtime this system boots —
+        # post-first boots skip the XLA compile; the warm pool goes one
+        # further and keeps `warm_pool` spare runtimes ALREADY BOOTED, so
+        # a grow-recarve registers capacity in milliseconds.
+        self.elastic = elastic
+        self.exec_cache = exec_cache if exec_cache is not None \
+            else ExecutableCache()
+        self._warm_pool_size = int(warm_pool)
+        self._warm: list[RuntimeProtocol] = []
+        self.warm_boots = 0        # clusters served from the warm pool
+        self.recarves = 0          # elastic repartitions applied
+        self.recarve_stall_us = 0  # duration of the last apply_shares
         for wc in work_classes:
             self.register(wc)
 
@@ -230,6 +250,12 @@ class LkSystem:
         for cl in self.cm.healthy_clusters():
             self._add_cluster(cl)
         self._repin()
+        if self.telemetry is not None:
+            self.telemetry.register_source("exec_cache",
+                                           self.exec_cache.counters)
+        self._prestage()
+        if self.elastic is not None:
+            self.elastic.bind(self)
         return self
 
     def __enter__(self) -> "LkSystem":
@@ -260,7 +286,14 @@ class LkSystem:
                 rt.dispose()
             except Exception:
                 pass
+        for rt in self._warm:
+            try:
+                rt.dispose()
+            except Exception:
+                pass
+        self._warm.clear()
         self.dispatcher = None
+        reap_deferred()    # finalize the teardown dispose() deferred
 
     # -- submission -----------------------------------------------------
     def submit(self, work_class: str, *, arg0: int = 0, arg1: int = 0,
@@ -280,6 +313,8 @@ class LkSystem:
             raise ValueError("n_chunks must be >= 1")
         self.reap()     # retire any lame duck whose backlog has drained —
         #                 result()-only callers never pass through drain()
+        if self.elastic is not None:
+            self.elastic.maybe_tick()
         desc = mb.WorkDescriptor(
             opcode=self._opcodes[work_class], arg0=arg0, arg1=arg1,
             seq_len=seq_len,
@@ -302,6 +337,8 @@ class LkSystem:
         self._require_booted()
         out = self.dispatcher.poll()
         self.reap()
+        if self.elastic is not None:
+            self.elastic.maybe_tick()
         return out
 
     def _require_booted(self) -> None:
@@ -335,29 +372,85 @@ class LkSystem:
             return                # nothing left; dispatcher raises
         clusters = self.cm.recarve(
             max(1, min(self._target_clusters, n_dev)))
-        # adopt survivors whose device partition is unchanged; boot fresh
-        # runtimes for new partitions; displaced survivors become lame
-        # ducks (they finish their backlog, then reap() retires them)
-        live_by_devs = {
-            frozenset(map(id, c.devices)): d
-            for d, c in self._cluster_of.items()
-            if d not in self._lame_ducks}
-        for cl_new in clusters:
-            key = frozenset(map(id, cl_new.devices))
-            adopted = live_by_devs.pop(key, None)
-            if adopted is not None:
-                self._cluster_of[adopted] = cl_new
-            else:
-                self._add_cluster(cl_new)
-        for duck in live_by_devs.values():
-            self._lame_ducks.add(duck)
-            self.dispatcher.quiesce(duck)     # drain, don't feed
-        self._repin()
+        self._rebuild_from_carve(clusters)
         if self.telemetry is not None:
             self.telemetry.emit(
                 EV_HEAL, cluster=did, generation=self.cm.generation,
                 clusters=len(self.cluster_ids()),
                 lame_ducks=len(self._lame_ducks), heals=self.heals)
+
+    def _rebuild_from_carve(self, clusters: Sequence[Cluster]) -> None:
+        """Reconcile live runtimes against a fresh carve — the machinery
+        both the failure-heal loop and an elastic recarve drive: adopt
+        survivors whose device partition is unchanged (their device-
+        resident state keeps serving), boot fresh runtimes for new
+        partitions (warm-pool / executable-cache backed), and lame-duck
+        displaced survivors (they finish their backlog, then ``reap()``
+        retires them — zero ticket loss). Partitions are matched as
+        device-id multisets, so identical partitions pair up one-for-one
+        even when the fleet repeats a physical device."""
+        live_by_devs: dict[tuple, list[int]] = {}
+        for d, c in self._cluster_of.items():
+            if d in self._lame_ducks:
+                continue
+            key = tuple(sorted(id(dev) for dev in c.devices))
+            live_by_devs.setdefault(key, []).append(d)
+        for cl_new in clusters:
+            key = tuple(sorted(id(dev) for dev in cl_new.devices))
+            cand = live_by_devs.get(key)
+            if cand:
+                self._cluster_of[cand.pop(0)] = cl_new
+            else:
+                self._add_cluster(cl_new)
+        for ducks in live_by_devs.values():
+            for duck in ducks:
+                self._lame_ducks.add(duck)
+                self.dispatcher.quiesce(duck)     # drain, don't feed
+        self._repin()
+
+    def apply_shares(self, shares: dict) -> dict:
+        """Elastic repartition: make each named work class own
+        ``shares[name]`` of the active clusters. When the requested total
+        differs from the live cluster count, the device fleet is recarved
+        and rebuilt through the heal-loop machinery (adopt / warm-boot /
+        lame-duck — no ticket is lost); then the class → cluster-set pins
+        are rewritten so placement follows the new carve. Returns the
+        applied pin map ``{name: (cluster_id, ...)}``.
+
+        This is the MECHANISM half: callers wanting the sustained-
+        imbalance policy and the admission safety gate go through
+        :class:`~repro.core.elastic.ElasticController`, which calls this
+        only for carves the analyses re-admitted."""
+        self._require_booted()
+        for name in shares:
+            if name not in self._classes:
+                raise KeyError(name)
+        t0 = now_us()
+        total = sum(max(int(k), 0) for k in shares.values())
+        if total < 1:
+            raise ValueError("shares must sum to >= 1")
+        n_dev = sum(c.n_devices for c in self.cm.healthy_clusters()) \
+            + len(self.cm.spare_devices)
+        total = max(1, min(total, n_dev))
+        if total != len(self.cluster_ids()):
+            self._rebuild_from_carve(self.cm.recarve(total))
+            self._target_clusters = total
+        alloc = allocate_clusters(sorted(self.cluster_ids()), shares)
+        for name, members in alloc.items():
+            self.dispatcher.pin(name, members)
+        self.recarves += 1
+        self.dispatcher.recarves += 1
+        # the stall: how long the system went without its full carve —
+        # bounded by the warm-pool reboot, not a cold lk_init
+        self.recarve_stall_us = now_us() - t0
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_RECARVE, generation=self.cm.generation,
+                clusters=len(self.cluster_ids()),
+                lame_ducks=len(self._lame_ducks),
+                stall_us=self.recarve_stall_us,
+                shares={n: len(m) for n, m in alloc.items()})
+        return alloc
 
     def reap(self) -> list[int]:
         """Unregister + dispose lame-duck clusters whose backlog drained;
@@ -382,12 +475,40 @@ class LkSystem:
                 except Exception:
                     pass
             reaped.append(did)
+        # dispose() defers its blocking teardown; this is the off-latency-
+        # path place it finalizes. Replenish the warm pool afterwards so
+        # the NEXT recarve finds pre-booted spares again.
+        reap_deferred()
+        self._prestage()
         return reaped
 
     # -- internals ------------------------------------------------------
+    def _prestage(self) -> int:
+        """Fill the warm pool up to ``warm_pool`` pre-BOOTED spare
+        runtimes (compile served by the shared executable cache), so a
+        grow-recarve registers capacity in milliseconds. Disabled when a
+        custom runtime/shardings factory makes runtimes cluster-specific
+        (a spare booted for one partition would be wrong for another)."""
+        if self._warm_pool_size <= 0 or self.dispatcher is None \
+                or self._runtime_factory is not None \
+                or self._shardings_factory is not None:
+            return 0
+        ref = next(iter(self.cm.healthy_clusters()), None)
+        if ref is None:
+            return 0
+        n = 0
+        while len(self._warm) < self._warm_pool_size:
+            self._warm.append(self._make_runtime(ref))
+            n += 1
+        return n
+
     def _add_cluster(self, cl: Cluster) -> int:
         did = next(self._next_dispatch_id)
-        rt = self._make_runtime(cl)
+        if self._warm:
+            rt = self._warm.pop()
+            self.warm_boots += 1
+        else:
+            rt = self._make_runtime(cl)
         self.dispatcher.register(did, rt)
         if self.telemetry is not None and hasattr(rt, "telemetry_cluster"):
             # runtime-level events carry the dispatcher cluster id so the
@@ -411,7 +532,8 @@ class LkSystem:
             max_inflight=self._max_inflight,
             max_steps=self._max_steps,
             donate=self._donate,
-            telemetry=self.telemetry)
+            telemetry=self.telemetry,
+            exec_cache=self.exec_cache)
         rt.boot(self._state_factory(cl))
         return rt
 
@@ -441,5 +563,9 @@ class LkSystem:
             "clusters": len(self.cluster_ids()) if self.dispatcher else 0,
             "lame_ducks": len(self._lame_ducks),
             "generation": self.cm.generation,
+            "warm_pool": len(self._warm),
+            "warm_boots": self.warm_boots,
+            "exec_cache_hits": self.exec_cache.hits,
+            "exec_cache_misses": self.exec_cache.misses,
         })
         return s

@@ -24,9 +24,9 @@ traced workload end to end.
 """
 from repro.core.telemetry.events import (
     EV_ADMIT, EV_CANCEL, EV_CHUNK_RETIRE, EV_ENGINE, EV_FAIL, EV_HEAL,
-    EV_PREEMPT, EV_REJECT, EV_REQUEUE, EV_RESOLVE, EV_RT_RETIRE,
-    EV_RT_TRIGGER, EV_SHED, EV_STREAM, EV_SUBMIT, EV_TRIGGER, EVENT_KINDS,
-    Event, TraceCollector,
+    EV_PREEMPT, EV_RECARVE, EV_REJECT, EV_REQUEUE, EV_RESOLVE,
+    EV_RT_RETIRE, EV_RT_TRIGGER, EV_SHED, EV_STREAM, EV_SUBMIT, EV_TRIGGER,
+    EVENT_KINDS, Event, TraceCollector,
 )
 from repro.core.telemetry.export import chrome_trace, write_chrome, write_csv
 from repro.core.telemetry.histogram import LogHistogram
@@ -37,7 +37,8 @@ from repro.core.telemetry.monitor import (
 __all__ = [
     "BOUND_VIOLATION", "BoundMonitor", "DEADLINE_MISS", "EVENT_KINDS",
     "EV_ADMIT", "EV_CANCEL", "EV_CHUNK_RETIRE", "EV_ENGINE", "EV_FAIL",
-    "EV_HEAL", "EV_PREEMPT", "EV_REJECT", "EV_REQUEUE", "EV_RESOLVE",
+    "EV_HEAL", "EV_PREEMPT", "EV_RECARVE", "EV_REJECT", "EV_REQUEUE",
+    "EV_RESOLVE",
     "EV_RT_RETIRE", "EV_RT_TRIGGER", "EV_SHED", "EV_STREAM", "EV_SUBMIT",
     "EV_TRIGGER",
     "Event", "LogHistogram", "TraceCollector", "Violation", "WCET_OVERRUN",

@@ -63,6 +63,14 @@ def main(argv=None):
     ap.add_argument("--high-every", type=int, default=4,
                     help="with --streams: every Nth stream is "
                          "HIGH-criticality (default 4)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="attach the elastic partitioning controller in "
+                         "ADVISORY mode: it observes the dispatcher's "
+                         "per-class backlog off the telemetry stream, "
+                         "admission-gates every proposed carve, and "
+                         "rewrites class pin sets when an imbalance "
+                         "sustains; the per-generation cluster-shares "
+                         "table prints at exit")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="attach the telemetry collector and export a "
                          "Chrome/Perfetto trace JSON of the run to PATH "
@@ -77,7 +85,9 @@ def main(argv=None):
     params = model.init(jax.random.key(args.seed))
 
     tracker = WcetTracker("serve")
-    collector = TraceCollector() if args.trace else None
+    # the elastic controller observes load through the telemetry stream,
+    # so --elastic attaches a collector even without --trace
+    collector = TraceCollector() if (args.trace or args.elastic) else None
     engine = ServingEngine(model, params, max_batch=args.max_batch,
                            max_seq=args.max_seq, tracker=tracker,
                            completion_window=args.completion_window,
@@ -88,6 +98,23 @@ def main(argv=None):
                            telemetry=collector)
     if args.no_preempt:
         engine.dispatcher.policy.preemptive = False
+    elastic = None
+    if args.elastic:
+        from repro.core.elastic import ElasticController
+        from repro.serving.engine import OP_DECODE, OP_INSERT, OP_PREFILL
+        classes = {"decode": OP_DECODE, "insert": OP_INSERT}
+        if args.chunked_prefill:
+            classes["prefill"] = OP_PREFILL
+        if args.streams:
+            from repro.serving.streams import OP_STREAM_HIGH, OP_STREAM_LOW
+            classes["stream_high"] = OP_STREAM_HIGH
+            classes["stream_low"] = OP_STREAM_LOW
+        elastic = ElasticController().bind_dispatcher(
+            engine.dispatcher, classes)
+        # advisory threading: ride the telemetry stream — every emitted
+        # event gives the controller a (rate-limited) chance to evaluate,
+        # so the serve loop needs no explicit tick plumbing
+        collector.subscribe(lambda ev: elastic.maybe_tick())
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size, rng.integers(4, 24))
                for _ in range(args.requests)]
@@ -150,7 +177,22 @@ def main(argv=None):
           f"rejected={ds.get('rejected', 0)} "
           f"stragglers={ds.get('stragglers', 0)} "
           f"window={ds.get('window', 0)}/{engine.dispatcher.completion_window}")
-    if collector is not None:
+    if elastic is not None:
+        ec = elastic.counters()
+        print(f"[serve] elastic: ticks={ec['ticks']} "
+              f"applied={ec['applied']} rejected={ec['rejected']} "
+              f"recarves={ds.get('recarves', 0)} "
+              f"recarve_rejected={ds.get('recarve_rejected', 0)}")
+        print("[serve] elastic shares by generation:")
+        if elastic.share_history:
+            for gen, shares in elastic.share_history:
+                cells = " ".join(f"{k}={v}" for k, v in sorted(
+                    shares.items()))
+                print(f"[serve]   gen {gen:3d}: {cells}")
+        else:
+            print("[serve]   gen   1: static carve held "
+                  "(no sustained imbalance)")
+    if collector is not None and args.trace:
         for line in collector.format_table("response_us"):
             print(f"[serve] {line}")
         mc = collector.monitor.counts()

@@ -3,8 +3,10 @@
     from repro.system import LkSystem, WorkClass
 """
 from repro.core.dispatcher import AdmissionError, Ticket, TicketCancelled
+from repro.core.elastic import ElasticController
 from repro.core.sched import CRIT_HIGH, CRIT_LOW, ClassSpec
 from repro.core.system import LkSystem, WorkClass
 
 __all__ = ["AdmissionError", "CRIT_HIGH", "CRIT_LOW", "ClassSpec",
-           "LkSystem", "Ticket", "TicketCancelled", "WorkClass"]
+           "ElasticController", "LkSystem", "Ticket", "TicketCancelled",
+           "WorkClass"]

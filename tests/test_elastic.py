@@ -1,0 +1,339 @@
+"""Elastic partitioning: ElasticController policy loop (hysteresis,
+cooldown, admission veto), LkSystem.apply_shares mechanism (recarve with
+zero ticket loss), warm-pool / executable-cache reboots, deferred
+dispose, and the Mailbox.grow invariant."""
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core import persistent
+from repro.core.dispatcher import Dispatcher, now_us
+from repro.core.elastic import ElasticController, allocate_clusters
+from repro.core.persistent import ExecutableCache, PersistentRuntime
+from repro.core.telemetry import EV_RECARVE, TraceCollector
+from repro.system import CRIT_HIGH, LkSystem, WorkClass
+
+
+class FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+
+def devs(n):
+    return [FakeDev(i) for i in range(n)]
+
+
+class FakeRuntime:
+    max_inflight = 2
+
+    def __init__(self, cid=0, log=None):
+        self.cid = cid
+        self.log = log if log is not None else []
+        self._q = deque()
+
+    def trigger(self, desc):
+        if len(self._q) >= self.max_inflight:
+            raise RuntimeError("full")
+        self._q.append(desc)
+
+    def ready(self):
+        return bool(self._q)
+
+    def wait(self):
+        desc = self._q.popleft()
+        self.log.append((self.cid, desc.request_id))
+        fg = np.zeros((mb.DESC_WIDTH,), np.int32)
+        fg[mb.W_STATUS] = mb.THREAD_FINISHED
+        fg[mb.W_REQID] = desc.request_id
+        return np.float32([desc.request_id]), fg
+
+    def dispose(self):
+        self._q.clear()
+
+
+class Clock:
+    """Injectable µs clock that only moves when told (plus a small
+    per-read tick so event ordering stays strict)."""
+
+    def __init__(self, t=1_000_000):
+        self.t = t
+
+    def __call__(self):
+        self.t += 1
+        return self.t
+
+    def advance(self, us):
+        self.t += us
+
+
+def add_one(state, desc):
+    state = dict(state)
+    state["x"] = state["x"] + 1.0
+    return state, state["x"].sum()[None]
+
+
+def make_system(**kw):
+    kw.setdefault("state_factory",
+                  lambda cl: {"x": jnp.zeros((4,), jnp.float32)})
+    kw.setdefault("result_template", jnp.zeros((1,), jnp.float32))
+    return LkSystem(**kw)
+
+
+# ---------------------------------------------------------------------------
+# share allocation
+# ---------------------------------------------------------------------------
+
+def test_allocate_clusters_proportional_with_floor():
+    alloc = allocate_clusters([0, 1, 2, 3], {"hi": 3, "lo": 1})
+    assert alloc == {"hi": (0, 1, 2), "lo": (3,)}
+    # every class keeps at least one cluster even at extreme skew
+    alloc = allocate_clusters([0, 1, 2, 3], {"hi": 100, "lo": 0})
+    assert len(alloc["hi"]) == 3 and len(alloc["lo"]) == 1
+    # partition property: disjoint cover of the id list
+    ids = [i for m in alloc.values() for i in m]
+    assert sorted(ids) == [0, 1, 2, 3]
+
+
+def test_allocate_clusters_more_classes_than_clusters():
+    alloc = allocate_clusters([0], {"a": 1, "b": 1, "c": 1})
+    covered = [i for m in alloc.values() for i in m]
+    assert covered == [0]          # tail classes unpinned, no id reused
+
+
+# ---------------------------------------------------------------------------
+# the mechanism: apply_shares recarves with zero ticket loss
+# ---------------------------------------------------------------------------
+
+def test_recarve_mid_stream_loses_zero_tickets():
+    """Property over several arrival orders: a live recarve (including a
+    total-cluster-count change that displaces runtimes) mid-stream never
+    loses a ticket and never violates an admitted HIGH bound — the
+    BoundMonitor closes with bound_violations == 0."""
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        log = []
+        collector = TraceCollector()
+        sys_ = make_system(
+            devices=devs(8), n_clusters=4, telemetry=collector,
+            runtime_factory=lambda cl: FakeRuntime(cl.cid, log),
+            work_classes=[
+                WorkClass("hi", fn=add_one, wcet_us=100.0,
+                          criticality=CRIT_HIGH),
+                WorkClass("lo", fn=add_one, wcet_us=100.0)])
+        with sys_:
+            sys_.apply_shares({"hi": 1, "lo": 3})
+            tickets = []
+            for i in range(30):
+                name = "hi" if rng.random() < 0.8 else "lo"
+                tickets.append(sys_.submit(
+                    name, deadline_us=now_us() + 60_000_000))
+                if i == 15:     # grow mid-stream: 4 -> 6 clusters
+                    sys_.apply_shares({"hi": 4, "lo": 2})
+            sys_.drain()
+            assert all(t.done() for t in tickets)
+            assert sorted(t.completion.request_id for t in tickets) == \
+                sorted(t.request_id for t in tickets)
+            assert collector.monitor.counts()["bound_violations"] == 0
+            s = sys_.stats()
+            assert s["recarves"] == 2
+            assert s["lame_ducks"] == 0          # ducks drained + reaped
+            assert len(sys_.cluster_ids()) == 6
+            # the pin map follows the carve
+            assert len(sys_.dispatcher.pins()["hi"]) == 4
+
+
+def test_recarve_counters_in_deadline_stats():
+    sys_ = make_system(devices=devs(4), n_clusters=2,
+                       runtime_factory=lambda cl: FakeRuntime(cl.cid),
+                       work_classes=[WorkClass("a", fn=add_one),
+                                     WorkClass("b", fn=add_one)])
+    with sys_:
+        ds = sys_.dispatcher.deadline_stats()
+        assert ds["recarves"] == 0 and ds["recarve_rejected"] == 0
+        sys_.apply_shares({"a": 1, "b": 1})
+        assert sys_.dispatcher.deadline_stats()["recarves"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the policy: hysteresis, cooldown, admission veto
+# ---------------------------------------------------------------------------
+
+def _advisory_setup(clock, n_clusters=4, **ctrl_kw):
+    d = Dispatcher({c: FakeRuntime(c) for c in range(n_clusters)},
+                   wcet_us={0: 100.0, 1: 100.0}, clock=clock,
+                   telemetry=TraceCollector(clock=clock))
+    ctrl = ElasticController(clock=clock, **ctrl_kw).bind_dispatcher(
+        d, {"hi": 0, "lo": 1})
+    d.pin("hi", (0, 1))
+    d.pin("lo", (2, 3))
+    return d, ctrl
+
+
+def _backlog(d, opcode, n, cluster=0, deadline_us=0):
+    return [d.submit(mb.WorkDescriptor(opcode=opcode, request_id=100 + i,
+                                       deadline_us=deadline_us),
+                     cluster=cluster, admission=False)
+            for i in range(n)]
+
+
+def test_hysteresis_oscillating_load_never_recarves():
+    """An oscillating demand split never survives the sustain window, so
+    the carve never flaps."""
+    clock = Clock()
+    d, ctrl = _advisory_setup(clock, sustain=2, cooldown_us=100_000,
+                              interval_us=0)
+    for _ in range(4):
+        hi = _backlog(d, 0, 6)               # hi-heavy -> proposal A
+        assert ctrl.tick() is None
+        for t in hi:
+            t.cancel()
+        lo = _backlog(d, 1, 6, cluster=2)    # lo-heavy -> proposal B
+        assert ctrl.tick() is None
+        for t in lo:
+            t.cancel()
+        clock.advance(10_000)
+    assert ctrl.applied == 0 and d.recarves == 0
+
+
+def test_sustained_imbalance_recarves_once_per_cooldown():
+    """Sustained imbalance applies exactly one recarve, and the cooldown
+    window blocks the next attempt until it expires."""
+    clock = Clock()
+    d, ctrl = _advisory_setup(clock, sustain=2, cooldown_us=100_000,
+                              interval_us=0)
+    _backlog(d, 0, 8)                        # persistent hi backlog
+    assert ctrl.tick() is None               # sustaining (1/2)
+    applied = ctrl.tick()                    # sustained -> applied
+    assert applied is not None and applied["hi"] == 3
+    assert d.recarves == 1
+    assert len(d.pins()["hi"]) == 3
+    # now invert the load inside the cooldown window: sustained, but the
+    # window blocks it
+    for t in d.policy.live_items(0) + d.policy.live_items(1):
+        if t.ticket is not None:
+            t.ticket.cancel()
+    _backlog(d, 1, 8, cluster=3)
+    assert ctrl.tick() is None
+    assert ctrl.tick() is None               # sustained but cooling down
+    assert d.recarves == 1
+    clock.advance(200_000)                   # cooldown expires; the load
+    assert ctrl.tick() is not None           # stayed sustained throughout
+    assert d.recarves == 2
+
+
+def test_admission_veto_rejects_unsafe_carve():
+    """A carve that would break an admitted class's EDF demand bound is
+    rejected: counted on recarve_rejected, emitted as EV_RECARVE with
+    rejected=True, and the pins do not move."""
+    clock = Clock()
+    d, ctrl = _advisory_setup(clock, sustain=1, cooldown_us=0,
+                              interval_us=0)
+    # lo holds admitted work whose bound only holds at share 2: demand
+    # 4x100µs across 2 clusters, earliest deadline 300µs out
+    _backlog(d, 1, 2, cluster=2, deadline_us=clock.t + 300)
+    _backlog(d, 1, 2, cluster=3, deadline_us=clock.t + 300)
+    _backlog(d, 0, 40)                       # hi pressure -> lo would shrink
+    pins_before = d.pins()
+    assert ctrl.tick() is None
+    assert ctrl.rejected == 1 and d.recarve_rejected == 1
+    assert d.recarves == 0 and d.pins() == pins_before
+    evs = d.telemetry.events_of(EV_RECARVE)
+    assert len(evs) == 1 and evs[0].extra["rejected"] is True
+
+
+def test_controller_drives_system_recarve_end_to_end():
+    """Full mode: the controller bound to an LkSystem observes a skewed
+    backlog through the normal submit path and drives apply_shares."""
+    clock = Clock()
+    ctrl = ElasticController(clock=clock, interval_us=0, sustain=1,
+                             cooldown_us=0)
+    sys_ = make_system(devices=devs(8), n_clusters=4, elastic=ctrl,
+                       runtime_factory=lambda cl: FakeRuntime(cl.cid),
+                       work_classes=[
+                           WorkClass("hi", fn=add_one, wcet_us=100.0),
+                           WorkClass("lo", fn=add_one, wcet_us=100.0)])
+    with sys_:
+        sys_.apply_shares({"hi": 1, "lo": 3})
+        tickets = [sys_.submit("hi") for _ in range(20)]
+        tickets += [sys_.submit("lo") for _ in range(3)]
+        sys_.drain()
+        assert all(t.done() for t in tickets)
+        assert sys_.recarves >= 2            # the seed carve + elastic
+        assert len(sys_.dispatcher.pins()["hi"]) == 3
+        assert ctrl.share_history[-1][1]["hi"] == 3
+
+
+# ---------------------------------------------------------------------------
+# warm reboots: executable cache, warm pool, deferred dispose
+# ---------------------------------------------------------------------------
+
+def _real_runtime(cache=None):
+    return PersistentRuntime([("w", add_one)],
+                             result_template=jnp.zeros((1,), jnp.float32),
+                             exec_cache=cache)
+
+
+def test_exec_cache_shares_compiled_step():
+    cache = ExecutableCache()
+    state = {"x": jnp.zeros((4,), jnp.float32)}
+    r1 = _real_runtime(cache)
+    r1.boot(state)
+    assert (cache.hits, cache.misses) == (0, 2)    # step + advance compiled
+    r2 = _real_runtime(cache)
+    r2.boot(state)
+    assert cache.misses == 2                       # nothing recompiled
+    assert cache.hits == 2                         # both programs reused
+    assert float(r2.run_sync(mb.WorkDescriptor(opcode=0,
+                                               request_id=1))[0][0]) > 0
+    r1.dispose()
+    r2.dispose()
+    persistent.reap_deferred()
+
+
+def test_warm_pool_serves_recarve():
+    sys_ = make_system(devices=devs(4), n_clusters=2, warm_pool=2,
+                       work_classes=[WorkClass("a", fn=add_one),
+                                     WorkClass("b", fn=add_one)])
+    with sys_:
+        assert sys_.stats()["warm_pool"] == 2
+        sys_.apply_shares({"a": 3, "b": 1})        # grow 2 -> 4 clusters
+        s = sys_.stats()
+        assert s["warm_boots"] == 2                # both new came prestaged
+        assert sys_.submit("a").result() is not None
+        sys_.drain()
+        assert sys_.stats()["warm_pool"] == 2      # reap() replenished
+
+
+def test_dispose_is_deferred_and_reaped():
+    persistent.reap_deferred()                     # start clean
+    rt = _real_runtime()
+    rt.boot({"x": jnp.zeros((4,), jnp.float32)})
+    rt.run_sync(mb.WorkDescriptor(opcode=0, request_id=1))
+    rt.dispose()
+    # dispose() detaches immediately (the fast path the bench measures)…
+    assert rt.state is None and rt.status == mb.THREAD_EXIT
+    # …and the blocking teardown runs in reap_deferred()
+    assert persistent.reap_deferred() == 1
+    assert persistent.reap_deferred() == 0         # idempotent
+
+
+# ---------------------------------------------------------------------------
+# mailbox grow invariant
+# ---------------------------------------------------------------------------
+
+def test_mailbox_grow_preserves_inflight_records():
+    box = mb.Mailbox(2)
+    d0 = mb.WorkDescriptor(opcode=0, request_id=7).encode()
+    d1 = mb.WorkDescriptor(opcode=1, request_id=8).encode()
+    box.post(0, d0)
+    box.post(1, d1)
+    box.grow(5)                                    # the generation bump
+    assert box.n == 5
+    assert [p.request_id for p in box.pending(0)] == [7]
+    assert [p.request_id for p in box.pending(1)] == [8]
+    assert box.pending(3) == []
+    box.ack(0, mb.THREAD_FINISHED, request_id=7)
+    assert box.pending(0) == [] and box.ack_mismatches == 0
