@@ -80,9 +80,12 @@ def _row_record(row: str, prev: dict[str, float] | None = None) -> dict:
     # ``*_speedup`` rows always carry their trajectory; the lk_dispose
     # rows carry it too as a regression note — PR 8 moved the blocking
     # teardown off the dispose hot path (deferred to ``reap``), and the
-    # prev= tag is what shows the ~1890µs -> O(µs) drop in-band
+    # prev= tag is what shows the ~1890µs -> O(µs) drop in-band.
+    # ``*_per_sec`` throughput rows (PR 9's drain-megakernel rate) track
+    # the same way: a rate regression shows as prev > current in-band
     if prev and name in prev and (name.endswith("_speedup")
-                                  or name.endswith("_lk_dispose")):
+                                  or name.endswith("_lk_dispose")
+                                  or name.endswith("_per_sec")):
         tag = f"prev={prev[name]:g}"
         derived = f"{derived},{tag}" if derived else tag
     return {"name": name, "us_per_call": us, "derived": derived}

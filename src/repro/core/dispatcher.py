@@ -368,10 +368,22 @@ class Dispatcher:
         for spec in self.policy.specs():
             telemetry.set_name(spec.opcode, spec.name)
 
+    def _staged_counters(self) -> tuple[int, int]:
+        """(hits, misses) of the registered runtimes' next-chunk double
+        buffers — how often a mid-item re-trigger was served device-side
+        vs forced back onto a fresh host transfer. Runtimes without a
+        staging buffer (test doubles, MegaRuntime) contribute zeros."""
+        hits = misses = 0
+        for rt in self.runtimes.values():
+            hits += getattr(rt, "staged_hits", 0)
+            misses += getattr(rt, "staged_misses", 0)
+        return hits, misses
+
     def _counter_snapshot(self) -> dict:
         """The dispatcher's scattered warn-once/error counters as one
         dict — the ``counters()`` source (and the audit surface: every
         counter here also appears in ``deadline_stats()``)."""
+        staged_hits, staged_misses = self._staged_counters()
         return {
             "completed": self._n_completed,
             "met": self._n_met,
@@ -382,6 +394,8 @@ class Dispatcher:
             "chunks": self.chunks_total,
             "doorbells": self.doorbells,
             "coalesced_triggers": self.coalesced_triggers,
+            "staged_hits": staged_hits,
+            "staged_misses": staged_misses,
             "stragglers": self._n_stragglers,
             "ack_mismatches": self.mailbox.ack_mismatches,
             "chunk_protocol_errors": self.chunk_protocol_errors,
@@ -1164,6 +1178,7 @@ class Dispatcher:
         """Exact lifetime statistics from running counters — NOT limited
         to the rolling ``completions`` window. The key set is stable from
         construction (idle dispatchers report zeros)."""
+        staged_hits, staged_misses = self._staged_counters()
         return {
             "n": self._n_completed,
             "met": self._n_met,
@@ -1174,6 +1189,9 @@ class Dispatcher:
             "chunks": self.chunks_total,
             "doorbells": self.doorbells,
             "coalesced_triggers": self.coalesced_triggers,
+            # next-chunk double-buffer effectiveness across live runtimes
+            "staged_hits": staged_hits,
+            "staged_misses": staged_misses,
             "policy": self.policy.name,
             "avg_service_us": (self._service_sum_us / self._n_completed
                                if self._n_completed else 0.0),

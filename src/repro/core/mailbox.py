@@ -36,6 +36,19 @@ padding rows), which the host materializes with one readback and retires
 row by row. ``post_many`` records a whole ring's work rows in the
 in-flight FIFO in one call, keeping failure-replay ordering identical to
 sequential posts.
+
+Queue control (megakernel dispatch): the mega runtime goes one step
+further and hands the device the WHOLE ring plus a small control vector
+(``QCTRL_WIDTH`` int32 words) so the drain loop itself runs device-side:
+  [QC_HEAD]    first descriptor row to execute (inclusive)
+  [QC_TAIL]    one past the last row to execute (exclusive)
+  [QC_STOP]    nonzero = drain nothing this launch (quiesce/EXIT path)
+  [QC_DRAINED] device-stamped: number of work rows actually executed
+The worker loops rows ``[head, tail)``, executes each work row for ONE
+chunk (the per-descriptor quantum), and stamps a per-row from_gpu ack
+(status / request id / chunk progress) that the zero-readback retire
+path consumes. ``QC_DRAINED`` carries the aggregate work count so ack
+rows stay byte-identical to the scan path's per-step from_gpu records.
 """
 from __future__ import annotations
 
@@ -59,6 +72,20 @@ DESC_WIDTH = 10
 # descriptor word indices
 (W_STATUS, W_OPCODE, W_ARG0, W_ARG1, W_SEQLEN, W_REQID, W_DL_LO, W_DL_HI,
  W_CHUNK, W_NCHUNKS) = range(10)
+
+# --- megakernel queue-control words (module docstring, "Queue control") ------
+QCTRL_WIDTH = 4
+QC_HEAD, QC_TAIL, QC_STOP, QC_DRAINED = range(QCTRL_WIDTH)
+
+
+def queue_control(tail: int, head: int = 0, stop: int = 0) -> np.ndarray:
+    """The ``(QCTRL_WIDTH,)`` int32 control vector of one drain launch."""
+    ctrl = np.zeros(QCTRL_WIDTH, np.int32)
+    ctrl[QC_HEAD] = head
+    ctrl[QC_TAIL] = tail
+    ctrl[QC_STOP] = stop
+    return ctrl
+
 
 # Effective deadline of deadline-free work. Descriptors encode "no deadline"
 # as deadline_us == 0 (the wire format's natural zero); every host-side

@@ -260,7 +260,110 @@ class _Block:
                 self.host_acks[i])
 
 
-class PersistentRuntime:
+class _PipelinedRuntime:
+    """Pipeline mechanics shared by every device-backed runtime: the
+    bounded in-flight deque of ``_Block``s, memoized oldest-ready polling,
+    strict-FIFO ``wait()``/``poll()``/``wait_all()`` retirement with ONE
+    bulk readback per block, and retire-time telemetry. Subclasses own the
+    TRIGGER side — how descriptors reach the device (``PersistentRuntime``
+    feeds a host-refilled scan ring; ``repro.core.mega.MegaRuntime`` hands
+    the device a whole control-worded queue) — plus the ``booted``
+    predicate and the ``_on_block_retired`` hook."""
+
+    def __init__(self, tracker: Optional[WcetTracker] = None,
+                 max_inflight: int = 2,
+                 telemetry: Optional[TraceCollector] = None,
+                 name: str = "lk"):
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        self.tracker = tracker or WcetTracker(name)
+        self.max_inflight = int(max_inflight)
+        self._inflight: deque[_Block] = deque()
+        self._oldest_ready = False     # memoized ready() of the oldest block
+        self.status = mb.THREAD_INIT
+        self.steps = 0
+        # runtime-level telemetry: step enqueue/retire instants with the
+        # in-flight depth — the device-facing view of the same timeline
+        # the dispatcher annotates with scheduling decisions. The cluster
+        # id is assigned by whoever registers this runtime (LkSystem).
+        self.telemetry = telemetry
+        self.telemetry_cluster = -1
+
+    @property
+    def booted(self) -> bool:
+        raise NotImplementedError
+
+    @property
+    def inflight(self) -> int:
+        """Number of enqueued-but-unretired steps (batch items counted)."""
+        return sum(blk.remaining for blk in self._inflight)
+
+    @property
+    def can_trigger(self) -> bool:
+        return self.booted and self.inflight < self.max_inflight
+
+    def _on_block_retired(self, blk: _Block) -> None:
+        """Hook: the oldest block fully retired (subclass bookkeeping)."""
+
+    def ready(self) -> bool:
+        """Non-blocking: has the OLDEST in-flight step finished on device?
+        The check is memoized — once the oldest block reports ready it
+        stays ready until retired, so pump loops that poll ``ready()``
+        before every retirement don't re-walk the tree each time."""
+        if not self._inflight:
+            return False
+        if self._oldest_ready:
+            return True
+        blk = self._inflight[0]
+        self._oldest_ready = blk.host_acks is not None or \
+            _tree_ready((blk.results, blk.acks))
+        return self._oldest_ready
+
+    def wait(self):
+        """Block until the oldest in-flight step completes; returns
+        (result, from_gpu). Steps retire strictly in trigger order. The
+        first wait on a batched block materializes the WHOLE ack block
+        (one readback); its remaining items then retire host-side."""
+        assert self._inflight, "nothing in flight"
+        blk = self._inflight[0]
+        with self.tracker.phase("wait"):
+            blk.materialize()
+            result, from_gpu = blk.pop_item()
+            if blk.remaining == 0:
+                self._inflight.popleft()
+                self._oldest_ready = False
+                self._on_block_retired(blk)
+        self.status = (mb.THREAD_WORKING if self._inflight
+                       else int(from_gpu[mb.W_STATUS]))
+        if self.telemetry is not None:
+            self.telemetry.emit(
+                EV_RT_RETIRE, cluster=self.telemetry_cluster,
+                request_id=int(from_gpu[mb.W_REQID]),
+                chunk=int(from_gpu[mb.W_CHUNK]),
+                status=int(from_gpu[mb.W_STATUS]),
+                depth=self.inflight)
+        return result, from_gpu
+
+    def poll(self):
+        """Retire the oldest in-flight step iff it already completed;
+        returns (result, from_gpu) or None."""
+        if not self.ready():
+            return None
+        return self.wait()
+
+    def wait_all(self) -> list:
+        """Drain the pipeline; returns retired (result, from_gpu) in order."""
+        out = []
+        while self._inflight:
+            out.append(self.wait())
+        return out
+
+    def run_sync(self, desc):
+        self.trigger(desc)
+        return self.wait()
+
+
+class PersistentRuntime(_PipelinedRuntime):
     """One persistent worker (paper: one SM / one cluster).
 
     work_fns: list of ``(name, fn)`` or ``(name, fn, carry_template)``.
@@ -283,6 +386,14 @@ class PersistentRuntime:
     with a single readback. ``donate=None`` donates the state only on
     accelerator backends (donation serializes dispatch on CPU — see the
     module docstring).
+
+    ``staged_cap`` bounds the next-chunk double buffer. Eviction prefers
+    entries whose item is NOT in flight any more (finished items drop
+    their staged chunks at retirement, so live entries survive interleaved
+    multi-item chunking up to the cap); ``staged_hits`` counts re-triggers
+    served device-side, ``staged_misses`` counts mid-item re-triggers that
+    had to pay a fresh host transfer because their staged entry was
+    evicted (or staging is off).
     """
 
     def __init__(self, work_fns: Sequence[tuple],
@@ -294,11 +405,14 @@ class PersistentRuntime:
                  max_inflight: int = 2,
                  max_steps: int = 8,
                  telemetry: Optional[TraceCollector] = None,
-                 exec_cache: Optional[ExecutableCache] = None):
-        if max_inflight < 1:
-            raise ValueError("max_inflight must be >= 1")
+                 exec_cache: Optional[ExecutableCache] = None,
+                 staged_cap: int = 4):
+        super().__init__(tracker=tracker, max_inflight=max_inflight,
+                         telemetry=telemetry, name="lk")
         if max_steps < 1:
             raise ValueError("max_steps must be >= 1")
+        if staged_cap < 0:
+            raise ValueError("staged_cap must be >= 0")
         self.work_names = [entry[0] for entry in work_fns]
         # the cache keys on the ORIGINAL fn objects: the normalized
         # wrappers below are per-runtime closures with distinct identities
@@ -308,33 +422,27 @@ class PersistentRuntime:
             entry[2] if len(entry) > 2 else jnp.zeros((), jnp.int32)
             for entry in work_fns]
         self._result_template = result_template
-        self.tracker = tracker or WcetTracker("lk")
         self.mesh = mesh
         self._state_shardings = state_shardings
         self._donate = donate
         self._exec_cache = exec_cache
         self._state = None
         self._carries = None
-        self.max_inflight = int(max_inflight)
         self.max_steps = int(max_steps)
-        self._inflight: deque[_Block] = deque()
-        self._oldest_ready = False     # memoized ready() of the oldest block
         self._compiled = None
         self._compiled_multi = None    # lazy: first trigger_many compiles it
         self._advance = None           # compiled device-side chunk advance
         # staged next-chunk descriptors (double buffer): key -> device vec
         self._staged: dict[tuple[int, int], Any] = {}
+        self._staged_cap = int(staged_cap)
+        # request ids with a LIVE mid-item chunk sequence: these items'
+        # staged entries are evicted LAST (dropping the very next chunk of
+        # an in-flight item forces a pointless host re-transfer)
+        self._live_rids: set[int] = set()
         self.staged_hits = 0           # re-triggers served device-side
+        self.staged_misses = 0         # evicted/unstaged mid-item re-triggers
         self.doorbells = 0             # batched trigger_many transfers
         self.batched_steps = 0         # steps issued through doorbells
-        self.status = mb.THREAD_INIT
-        self.steps = 0
-        # runtime-level telemetry: step enqueue/retire instants with the
-        # in-flight depth — the device-facing view of the same timeline
-        # the dispatcher annotates with scheduling decisions. The cluster
-        # id is assigned by whoever registers this runtime (LkSystem).
-        self.telemetry = telemetry
-        self.telemetry_cluster = -1
 
     # ------------------------------------------------------------------
     def _lk_step(self, state, carries, desc):
@@ -474,14 +582,8 @@ class PersistentRuntime:
 
     # ------------------------------------------------------------------
     @property
-    def inflight(self) -> int:
-        """Number of enqueued-but-unretired steps (batch items counted)."""
-        return sum(blk.remaining for blk in self._inflight)
-
-    @property
-    def can_trigger(self) -> bool:
-        return self._compiled is not None and \
-            self.inflight < self.max_inflight
+    def booted(self) -> bool:
+        return self._compiled is not None
 
     @staticmethod
     def _desc_fields(desc) -> tuple:
@@ -499,11 +601,21 @@ class PersistentRuntime:
                     dvec) -> None:
         """Double buffer: stage the NEXT chunk's descriptor device-side
         (a compiled ``chunk += 1``) while the current chunk runs, so a
-        remainder re-trigger pays no fresh host transfer."""
-        if n_chunks > chunk + 1:
-            self._staged[(rid, chunk + 1)] = self._advance(dvec)
-            while len(self._staged) > 4:       # bounded staging buffer
-                self._staged.pop(next(iter(self._staged)))
+        remainder re-trigger pays no fresh host transfer. Bounded by
+        ``staged_cap``; eviction takes non-inflight entries first (a
+        finished item's leftovers, a replayed-away remainder) and only
+        then the oldest LIVE entry — never the one just staged."""
+        if n_chunks <= chunk + 1 or self._staged_cap <= 0:
+            return
+        just_staged = (rid, chunk + 1)
+        self._staged[just_staged] = self._advance(dvec)
+        self._live_rids.add(rid)
+        while len(self._staged) > self._staged_cap:
+            keys = [k for k in self._staged if k != just_staged]
+            if not keys:
+                break
+            stale = [k for k in keys if k[0] not in self._live_rids]
+            self._staged.pop(stale[0] if stale else keys[0])
 
     def trigger(self, desc) -> None:
         """Send one mailbox descriptor (async — returns at enqueue)."""
@@ -519,6 +631,11 @@ class PersistentRuntime:
             if dvec is not None:
                 self.staged_hits += 1          # device-resident re-trigger
             else:
+                if chunk > 0:
+                    # a mid-item re-trigger whose staged entry was evicted
+                    # (or staging is capped off): the fresh transfer below
+                    # is exactly the cost the double buffer exists to hide
+                    self.staged_misses += 1
                 dvec = jnp.asarray(enc if enc is not None
                                    else desc.encode())
             self._stage_next(rid, chunk, n_chunks, dvec)
@@ -580,61 +697,18 @@ class PersistentRuntime:
         self.status = mb.THREAD_WORKING
         return len(descs)
 
-    def ready(self) -> bool:
-        """Non-blocking: has the OLDEST in-flight step finished on device?
-        The check is memoized — once the oldest block reports ready it
-        stays ready until retired, so pump loops that poll ``ready()``
-        before every retirement don't re-walk the tree each time."""
-        if not self._inflight:
-            return False
-        if self._oldest_ready:
-            return True
-        blk = self._inflight[0]
-        self._oldest_ready = blk.host_acks is not None or \
-            _tree_ready((blk.results, blk.acks))
-        return self._oldest_ready
-
     def wait(self):
-        """Block until the oldest in-flight step completes; returns
-        (result, from_gpu). Steps retire strictly in trigger order. The
-        first wait on a batched block materializes the WHOLE ack block
-        (one readback); its remaining items then retire host-side."""
-        assert self._inflight, "nothing in flight"
-        blk = self._inflight[0]
-        with self.tracker.phase("wait"):
-            blk.materialize()
-            result, from_gpu = blk.pop_item()
-            if blk.remaining == 0:
-                self._inflight.popleft()
-                self._oldest_ready = False
-        self.status = (mb.THREAD_WORKING if self._inflight
-                       else int(from_gpu[mb.W_STATUS]))
-        if self.telemetry is not None:
-            self.telemetry.emit(
-                EV_RT_RETIRE, cluster=self.telemetry_cluster,
-                request_id=int(from_gpu[mb.W_REQID]),
-                chunk=int(from_gpu[mb.W_CHUNK]),
-                status=int(from_gpu[mb.W_STATUS]),
-                depth=self.inflight)
+        result, from_gpu = super().wait()
+        if self._live_rids and \
+                int(from_gpu[mb.W_STATUS]) == mb.THREAD_FINISHED:
+            # the item is done: its rid leaves the live set and any
+            # still-staged next-chunk entries become eviction fodder
+            rid = int(from_gpu[mb.W_REQID])
+            if rid in self._live_rids:
+                self._live_rids.discard(rid)
+                for k in [k for k in self._staged if k[0] == rid]:
+                    del self._staged[k]
         return result, from_gpu
-
-    def poll(self):
-        """Retire the oldest in-flight step iff it already completed;
-        returns (result, from_gpu) or None."""
-        if not self.ready():
-            return None
-        return self.wait()
-
-    def wait_all(self) -> list:
-        """Drain the pipeline; returns retired (result, from_gpu) in order."""
-        out = []
-        while self._inflight:
-            out.append(self.wait())
-        return out
-
-    def run_sync(self, desc):
-        self.trigger(desc)
-        return self.wait()
 
     # ------------------------------------------------------------------
     @property
@@ -675,6 +749,7 @@ class PersistentRuntime:
             self._inflight.clear()
             self._oldest_ready = False
             self._staged.clear()
+            self._live_rids.clear()
             self._state = None
             self._carries = None
             self._compiled = None

@@ -133,7 +133,12 @@ class LkSystem:
                  wcet_quantile: Optional[float] = None,
                  elastic: Optional[ElasticController] = None,
                  warm_pool: int = 0,
-                 exec_cache: Optional[ExecutableCache] = None):
+                 exec_cache: Optional[ExecutableCache] = None,
+                 runtime: str = "scan",
+                 staged_cap: int = 4):
+        if runtime not in ("scan", "mega"):
+            raise ValueError(
+                f"runtime must be 'scan' or 'mega', got {runtime!r}")
         self.cm = cluster_manager if cluster_manager is not None else \
             ClusterManager(devices=devices, n_clusters=n_clusters,
                            axis_names=axis_names,
@@ -148,6 +153,14 @@ class LkSystem:
         self._straggler_factor = straggler_factor
         self._shardings_factory = state_shardings_factory
         self._runtime_factory = runtime_factory
+        # runtime selection: "scan" = PersistentRuntime (host-refilled
+        # descriptor ring, the default); "mega" = MegaRuntime (device-
+        # resident queue drained by ONE pallas megakernel per cluster —
+        # classes must follow the drain kernel's tile-op table, validated
+        # at boot). Per-item dispatch falls back through trigger() on
+        # both, so dispatcher semantics (preemption, replay) are shared.
+        self._runtime = runtime
+        self._staged_cap = int(staged_cap)
         self._heal = heal
         self._policy = policy
         self._preemptive = preemptive
@@ -521,6 +534,22 @@ class LkSystem:
     def _make_runtime(self, cl: Cluster) -> RuntimeProtocol:
         if self._runtime_factory is not None:
             return self._runtime_factory(cl)
+        if self._runtime == "mega":
+            from repro.core.mega import MegaRuntime, TILE_OP_NAMES
+            names = tuple(self._classes)
+            if names != TILE_OP_NAMES[:len(names)]:
+                raise ValueError(
+                    "runtime='mega' compiles the drain megakernel's fixed "
+                    "opcode table: registered class names must be a "
+                    f"prefix of {TILE_OP_NAMES} in order, got {names} "
+                    "(use repro.core.mega.mega_work_classes())")
+            rt = MegaRuntime(
+                max_inflight=self._max_inflight,
+                max_steps=self._max_steps,
+                telemetry=self.telemetry,
+                exec_cache=self.exec_cache)
+            rt.boot(self._state_factory(cl))
+            return rt
         shardings = (self._shardings_factory(cl)
                      if self._shardings_factory is not None else None)
         rt = PersistentRuntime(
@@ -533,7 +562,8 @@ class LkSystem:
             max_steps=self._max_steps,
             donate=self._donate,
             telemetry=self.telemetry,
-            exec_cache=self.exec_cache)
+            exec_cache=self.exec_cache,
+            staged_cap=self._staged_cap)
         rt.boot(self._state_factory(cl))
         return rt
 

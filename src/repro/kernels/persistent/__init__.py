@@ -1,6 +1,12 @@
-from repro.kernels.persistent.kernel import (NUM_OPS, OP_ADD, OP_COPY,
-                                             OP_MATMUL, OP_NOP, OP_RELU,
-                                             OP_SCALE, TILE, pack_args,
-                                             pack_scale)
-from repro.kernels.persistent.ops import build_queue, persistent_execute
-from repro.kernels.persistent.ref import persistent_execute_ref
+from repro.kernels.persistent.kernel import (NUM_DRAIN_OPS, NUM_OPS, OP_ADD,
+                                             OP_COPY, OP_MATMUL, OP_NOP,
+                                             OP_REDUCE, OP_RELU, OP_SCALE,
+                                             TILE, pack_args, pack_scale,
+                                             persistent_drain_pallas)
+from repro.kernels.persistent.ops import (TILE_OP_NAMES,
+                                          TILE_RESULT_TEMPLATE, build_queue,
+                                          persistent_drain,
+                                          persistent_execute, tile_state,
+                                          tile_work_table)
+from repro.kernels.persistent.ref import (persistent_drain_ref,
+                                          persistent_execute_ref)

@@ -12,6 +12,22 @@ paper transposed to per-op launch overhead.
 
 Opcodes: NOP / MATMUL (dst += a@b) / ADD / SCALE (fixed-point arg) / RELU /
 COPY. Tiles are f32 (T, T) with T=128.
+
+Two kernels live here:
+
+* ``_executor_kernel`` — the original demo: drains a whole static queue,
+  answers ONE from_gpu row per cluster (done count in W_ARG0).
+* ``_drain_kernel`` — the dispatch fast path (``MegaRuntime``): the queue
+  is paired with a ``QCTRL_WIDTH`` control vector (head / tail / stop /
+  drained — see ``core.mailbox``), each work row executes for exactly ONE
+  chunk (the per-descriptor quantum) threading a resumable carry, and the
+  kernel stamps a PER-ROW from_gpu ack (FINISHED / PREEMPTED / NOP +
+  request id + chunk words) byte-identical to the scan path's
+  ``_lk_step`` records, so the host's zero-readback retire loop — and the
+  dispatcher's chunk-boundary preemption on top of it — consume device-
+  stamped words without any per-chunk roundtrip. The aggregate work count
+  lands in the control output's ``QC_DRAINED`` word, NOT in the ack rows
+  (keeping them token-identical to the scan path).
 """
 from __future__ import annotations
 
@@ -21,8 +37,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.mailbox import (DESC_WIDTH, THREAD_FINISHED, THREAD_WORK,
-                                W_ARG0, W_ARG1, W_OPCODE, W_STATUS)
+from repro.core.mailbox import (DESC_WIDTH, QC_DRAINED, QC_HEAD, QC_STOP,
+                                QC_TAIL, QCTRL_WIDTH, THREAD_FINISHED,
+                                THREAD_NOP, THREAD_PREEMPTED, THREAD_WORK,
+                                W_ARG0, W_ARG1, W_CHUNK, W_NCHUNKS, W_OPCODE,
+                                W_REQID, W_STATUS)
 
 TILE = 128
 
@@ -33,6 +52,12 @@ OP_SCALE = 3
 OP_RELU = 4
 OP_COPY = 5
 NUM_OPS = 6
+
+# drain-path extension: a chunk-carrying reduction (carry += sum(ws[a]),
+# result = carry) — exercises the resumable-carry thread through both the
+# megakernel and the scan path. The legacy executor keeps its 6-op table.
+OP_REDUCE = 6
+NUM_DRAIN_OPS = 7
 
 # descriptor arg packing for tile ops: arg0 = dst*256 + a, arg1 = b or
 # fixed-point scale (<<16)
@@ -134,3 +159,143 @@ def persistent_execute_pallas(queue, workspace, *, interpret: bool = False):
         interpret=interpret,
     )(queue, workspace)
     return out, fromgpu
+
+
+def _drain_kernel(ctrl_ref, queue_ref, ws_ref, carry_ref, out_ref,
+                  carry_out_ref, ack_ref, res_ref, ctrl_out_ref):
+    """ctrl: (1, QCTRL_WIDTH) i32; queue: (1, Q, DESC_WIDTH) i32;
+    ws/out: (1, NBUF, T, T) f32 (aliased); carry: (1, 1) f32 (aliased) —
+    the resumable reduction accumulator threaded across rows AND launches.
+    ack: (1, Q, DESC_WIDTH) i32 per-row from_gpu records; res: (1, Q, 1)
+    f32 per-row results; ctrl_out: ctrl with QC_DRAINED stamped."""
+    out_ref[...] = ws_ref[...]
+    carry_out_ref[...] = carry_ref[...]
+    head = ctrl_ref[0, QC_HEAD]
+    tail = ctrl_ref[0, QC_TAIL]
+    stop = ctrl_ref[0, QC_STOP]
+    q_len = queue_ref.shape[1]
+
+    def _dst_a(desc):
+        packed = desc[W_ARG0]
+        return packed // 256, packed % 256
+
+    def op_nop(i, desc):
+        res_ref[0, i, 0] = 0.0
+
+    def op_matmul(i, desc):
+        dst, a = _dst_a(desc)
+        b = desc[W_ARG1]
+        acc = jax.lax.dot_general(out_ref[0, a], out_ref[0, b],
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        new = out_ref[0, dst] + acc
+        out_ref[0, dst] = new
+        res_ref[0, i, 0] = jnp.sum(new)
+
+    def op_add(i, desc):
+        dst, a = _dst_a(desc)
+        new = out_ref[0, a] + out_ref[0, desc[W_ARG1]]
+        out_ref[0, dst] = new
+        res_ref[0, i, 0] = jnp.sum(new)
+
+    def op_scale(i, desc):
+        dst, a = _dst_a(desc)
+        scale = desc[W_ARG1].astype(jnp.float32) / (1 << SCALE_SHIFT)
+        new = out_ref[0, a] * scale
+        out_ref[0, dst] = new
+        res_ref[0, i, 0] = jnp.sum(new)
+
+    def op_relu(i, desc):
+        dst, a = _dst_a(desc)
+        new = jnp.maximum(out_ref[0, a], 0.0)
+        out_ref[0, dst] = new
+        res_ref[0, i, 0] = jnp.sum(new)
+
+    def op_copy(i, desc):
+        dst, a = _dst_a(desc)
+        new = out_ref[0, a]
+        out_ref[0, dst] = new
+        res_ref[0, i, 0] = jnp.sum(new)
+
+    def op_reduce(i, desc):
+        _dst, a = _dst_a(desc)
+        acc = carry_out_ref[0, 0] + jnp.sum(out_ref[0, a])
+        carry_out_ref[0, 0] = acc
+        res_ref[0, i, 0] = acc
+
+    ops = [op_nop, op_matmul, op_add, op_scale, op_relu, op_copy,
+           op_reduce]
+
+    def body(i, drained):
+        desc = queue_ref[0, i]
+        active = ((i >= head) & (i < tail) & (stop == 0)
+                  & (desc[W_STATUS] >= THREAD_WORK))
+
+        def run():
+            opcode = jnp.clip(desc[W_OPCODE], 0, NUM_DRAIN_OPS - 1)
+            jax.lax.switch(opcode, ops, i, desc)
+
+        def skip():
+            res_ref[0, i, 0] = 0.0
+
+        jax.lax.cond(active, run, skip)
+        # the per-descriptor quantum: one chunk ran — FINISHED only when
+        # it was the item's last, PREEMPTED otherwise (the host requeues
+        # the remainder through the normal scheduling lane)
+        done = desc[W_CHUNK] + 1 >= jnp.maximum(desc[W_NCHUNKS], 1)
+        row = jnp.zeros((DESC_WIDTH,), jnp.int32)
+        row = row.at[W_STATUS].set(
+            jnp.where(active,
+                      jnp.where(done, THREAD_FINISHED, THREAD_PREEMPTED),
+                      THREAD_NOP))
+        row = row.at[W_REQID].set(desc[W_REQID])
+        row = row.at[W_CHUNK].set(desc[W_CHUNK])
+        row = row.at[W_NCHUNKS].set(desc[W_NCHUNKS])
+        ack_ref[0, i] = row
+        return drained + active.astype(jnp.int32)
+
+    drained = jax.lax.fori_loop(0, q_len, body, jnp.int32(0))
+    ctrl_out_ref[0, :] = ctrl_ref[0, :].at[QC_DRAINED].set(drained)
+
+
+def persistent_drain_pallas(ctrl, queue, workspace, carry, *,
+                            interpret: bool = False):
+    """One drain launch per cluster: execute queue rows ``[head, tail)``
+    for one chunk each, device-stamping per-row acks.
+
+    ctrl: (C, QCTRL_WIDTH) i32; queue: (C, Q, DESC_WIDTH) i32;
+    workspace: (C, NBUF, T, T) f32; carry: (C, 1) f32.
+    Returns (workspace', carry', acks (C, Q, DESC_WIDTH),
+    results (C, Q, 1), ctrl')."""
+    C, Q, W = queue.shape
+    _, NBUF, T, _ = workspace.shape
+    assert W == DESC_WIDTH and T == TILE
+    assert ctrl.shape == (C, QCTRL_WIDTH)
+    assert carry.shape == (C, 1)
+
+    return pl.pallas_call(
+        _drain_kernel,
+        grid=(C,),
+        in_specs=[
+            pl.BlockSpec((1, QCTRL_WIDTH), lambda c: (c, 0)),
+            pl.BlockSpec((1, Q, W), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, NBUF, T, T), lambda c: (c, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda c: (c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, NBUF, T, T), lambda c: (c, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda c: (c, 0)),
+            pl.BlockSpec((1, Q, W), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, Q, 1), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, QCTRL_WIDTH), lambda c: (c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(workspace.shape, workspace.dtype),
+            jax.ShapeDtypeStruct((C, 1), jnp.float32),
+            jax.ShapeDtypeStruct((C, Q, W), jnp.int32),
+            jax.ShapeDtypeStruct((C, Q, 1), jnp.float32),
+            jax.ShapeDtypeStruct((C, QCTRL_WIDTH), jnp.int32),
+        ],
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(ctrl, queue, workspace, carry)

@@ -4,11 +4,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mailbox import (DESC_WIDTH, THREAD_FINISHED, THREAD_WORK,
-                                W_ARG0, W_ARG1, W_OPCODE, W_STATUS)
-from repro.kernels.persistent.kernel import (NUM_OPS, OP_ADD, OP_COPY,
-                                             OP_MATMUL, OP_NOP, OP_RELU,
-                                             OP_SCALE, SCALE_SHIFT)
+from repro.core.mailbox import (DESC_WIDTH, QC_DRAINED, QC_HEAD, QC_STOP,
+                                QC_TAIL, QCTRL_WIDTH, THREAD_FINISHED,
+                                THREAD_NOP, THREAD_PREEMPTED, THREAD_WORK,
+                                W_ARG0, W_ARG1, W_CHUNK, W_NCHUNKS, W_OPCODE,
+                                W_REQID, W_STATUS)
+from repro.kernels.persistent.kernel import (NUM_DRAIN_OPS, NUM_OPS, OP_ADD,
+                                             OP_COPY, OP_MATMUL, OP_NOP,
+                                             OP_REDUCE, OP_RELU, OP_SCALE,
+                                             SCALE_SHIFT)
 
 
 def persistent_execute_ref(queue, workspace):
@@ -43,3 +47,61 @@ def persistent_execute_ref(queue, workspace):
         fromgpu[c, W_STATUS] = THREAD_FINISHED
         fromgpu[c, W_ARG0] = done
     return jnp.asarray(ws), jnp.asarray(fromgpu)
+
+
+def persistent_drain_ref(ctrl, queue, workspace, carry):
+    """Numpy oracle for the drain megakernel (``_drain_kernel``): one
+    chunk per row in ``[head, tail)``, per-row acks, QC_DRAINED stamped."""
+    ctrl = np.asarray(ctrl)
+    queue = np.asarray(queue)
+    ws = np.array(workspace, dtype=np.float32, copy=True)
+    carry = np.array(carry, dtype=np.float32, copy=True)
+    C, Q, W = queue.shape
+    assert ctrl.shape == (C, QCTRL_WIDTH) and carry.shape == (C, 1)
+    acks = np.zeros((C, Q, DESC_WIDTH), np.int32)
+    results = np.zeros((C, Q, 1), np.float32)
+    ctrl_out = ctrl.copy()
+    for c in range(C):
+        head, tail, stop = (int(ctrl[c, QC_HEAD]), int(ctrl[c, QC_TAIL]),
+                            int(ctrl[c, QC_STOP]))
+        drained = 0
+        for i in range(Q):
+            desc = queue[c, i]
+            active = (head <= i < tail and stop == 0
+                      and int(desc[W_STATUS]) >= THREAD_WORK)
+            res = 0.0
+            if active:
+                drained += 1
+                op = int(np.clip(desc[W_OPCODE], 0, NUM_DRAIN_OPS - 1))
+                packed = int(desc[W_ARG0])
+                dst, a = packed // 256, packed % 256
+                b = int(desc[W_ARG1])
+                if op == OP_MATMUL:
+                    ws[c, dst] = ws[c, dst] + ws[c, a] @ ws[c, b]
+                    res = float(ws[c, dst].sum())
+                elif op == OP_ADD:
+                    ws[c, dst] = ws[c, a] + ws[c, b]
+                    res = float(ws[c, dst].sum())
+                elif op == OP_SCALE:
+                    ws[c, dst] = ws[c, a] * (b / (1 << SCALE_SHIFT))
+                    res = float(ws[c, dst].sum())
+                elif op == OP_RELU:
+                    ws[c, dst] = np.maximum(ws[c, a], 0.0)
+                    res = float(ws[c, dst].sum())
+                elif op == OP_COPY:
+                    ws[c, dst] = ws[c, a]
+                    res = float(ws[c, dst].sum())
+                elif op == OP_REDUCE:
+                    carry[c, 0] = carry[c, 0] + ws[c, a].sum()
+                    res = float(carry[c, 0])
+            done = int(desc[W_CHUNK]) + 1 >= max(int(desc[W_NCHUNKS]), 1)
+            acks[c, i, W_STATUS] = (
+                (THREAD_FINISHED if done else THREAD_PREEMPTED)
+                if active else THREAD_NOP)
+            acks[c, i, W_REQID] = desc[W_REQID]
+            acks[c, i, W_CHUNK] = desc[W_CHUNK]
+            acks[c, i, W_NCHUNKS] = desc[W_NCHUNKS]
+            results[c, i, 0] = res
+        ctrl_out[c, QC_DRAINED] = drained
+    return (jnp.asarray(ws), jnp.asarray(carry), jnp.asarray(acks),
+            jnp.asarray(results), jnp.asarray(ctrl_out))

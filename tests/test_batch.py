@@ -30,13 +30,14 @@ def chunk_fn(state, carry, desc):
     return state, carry, carry.astype(jnp.float32)[None], done
 
 
-def make_rt(max_inflight=8, max_steps=4, telemetry=None, chunked=False):
+def make_rt(max_inflight=8, max_steps=4, telemetry=None, chunked=False,
+            staged_cap=4):
     fns = [("add", add_fn)]
     if chunked:
         fns.append(("chunk", chunk_fn, jnp.zeros((), jnp.int32)))
     rt = PersistentRuntime(fns, result_template=jnp.zeros((1,), jnp.float32),
                            max_inflight=max_inflight, max_steps=max_steps,
-                           telemetry=telemetry)
+                           telemetry=telemetry, staged_cap=staged_cap)
     rt.boot({"x": jnp.zeros((4,), jnp.float32)})
     return rt
 
@@ -171,6 +172,108 @@ def test_staged_double_buffer_serves_re_trigger():
     rt.trigger(d)
     rt.wait()
     assert rt.staged_hits == 2
+    rt.dispose()
+
+
+def _chunk_chain(rid, n_chunks=3, arg0=1):
+    d = mb.WorkDescriptor(opcode=1, arg0=arg0, request_id=rid,
+                          n_chunks=n_chunks)
+    out = [d]
+    for _ in range(n_chunks - 1):
+        d = d.advance()
+        out.append(d)
+    return out
+
+
+def test_staged_cap_zero_disables_staging():
+    """staged_cap=0 turns the double buffer off: every mid-item
+    re-trigger pays a fresh host transfer and counts as a miss."""
+    rt = make_rt(chunked=True, staged_cap=0)
+    for d in _chunk_chain(rid=3):
+        rt.trigger(d)
+        rt.wait()
+    assert rt.staged_hits == 0
+    assert rt.staged_misses == 2            # chunks 1 and 2
+    rt.dispose()
+
+
+def test_staged_cap_negative_rejected():
+    with pytest.raises(ValueError, match="staged_cap"):
+        PersistentRuntime([("add", add_fn)],
+                          result_template=jnp.zeros((1,), jnp.float32),
+                          staged_cap=-1)
+
+
+def test_staged_eviction_under_cap_counts_misses():
+    """Two interleaved 3-chunk items against staged_cap=1: each staging
+    evicts the other item's entry, so mid-item re-triggers miss until
+    the final round, where the survivor's entry hits. The items still
+    retire correctly — eviction costs a transfer, never correctness."""
+    rt = make_rt(chunked=True, staged_cap=1)
+    a, b = _chunk_chain(rid=1), _chunk_chain(rid=2)
+    statuses = []
+    for step in range(3):
+        rt.trigger(a[step])
+        rt.trigger(b[step])
+        statuses.append(rt.wait()[1][mb.W_STATUS])
+        statuses.append(rt.wait()[1][mb.W_STATUS])
+    assert rt.staged_hits == 1              # b's final chunk survived
+    assert rt.staged_misses == 3            # a.c1, b.c1, a.c2
+    assert list(statuses[-2:]) == [mb.THREAD_FINISHED, mb.THREAD_FINISHED]
+    assert rt._staged == {} and rt._live_rids == set()
+    rt.dispose()
+
+
+def test_staged_eviction_prefers_non_live_entries():
+    """Over-cap eviction takes a NON-live entry (an item whose remainder
+    was replayed away from this cluster) before any live item's staged
+    chunk."""
+    rt = make_rt(chunked=True, staged_cap=2)
+    a, b, c = (_chunk_chain(rid=r) for r in (1, 2, 3))
+    rt.trigger(a[0])
+    rt.trigger(b[0])                        # staged: (1,1), (2,1) — at cap
+    rt._live_rids.discard(1)                # a's remainder replayed away
+    rt.trigger(c[0])                        # stages (3,1): evicts (1,1)
+    for _ in range(3):
+        rt.wait()
+    rt.trigger(b[1])                        # live entry survived -> hit
+    rt.trigger(c[1])                        # live entry survived -> hit
+    rt.trigger(a[1])                        # the stale one was evicted
+    for _ in range(3):
+        rt.wait()
+    assert rt.staged_hits == 2
+    assert rt.staged_misses == 1
+    rt.dispose()
+
+
+def test_finished_item_releases_staged_entries():
+    """FINISHED retirement drops the item's live flag and any leftover
+    staged chunks — they must not linger as eviction pressure."""
+    rt = make_rt(chunked=True, staged_cap=4)
+    d = _chunk_chain(rid=5)
+    for step in d:
+        rt.trigger(step)
+        rt.wait()
+    assert rt._staged == {}
+    assert rt._live_rids == set()
+    assert rt.staged_hits == 2
+    assert rt.staged_misses == 0
+    rt.dispose()
+
+
+def test_dispatcher_surfaces_staged_counters():
+    """deadline_stats() reports staged_hits AND staged_misses summed over
+    the fleet — the dispatcher's chunk re-triggers are served from the
+    double buffer."""
+    rt = make_rt(chunked=True, max_inflight=2)
+    disp = Dispatcher({0: rt})
+    disp.submit(mb.WorkDescriptor(opcode=1, arg0=5, request_id=7,
+                                  n_chunks=3), admission=False)
+    disp.drain()
+    stats = disp.deadline_stats()
+    assert stats["staged_hits"] == rt.staged_hits
+    assert stats["staged_misses"] == rt.staged_misses
+    assert stats["staged_hits"] >= 1
     rt.dispose()
 
 

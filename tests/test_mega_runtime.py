@@ -1,0 +1,241 @@
+"""Megakernel fast path: MegaRuntime vs the scan path.
+
+The contract under test is TOKEN IDENTITY — the same mixed-opcode
+descriptor sequence (including a mid-queue THREAD_PREEMPTED stamp and
+chunked reduce carries) retires byte-identical from_gpu records and
+matching results through ``MegaRuntime`` (one drain launch per batch)
+and through ``PersistentRuntime`` compiled from ``tile_work_table()``
+(the scan-path twin). On top of that: the device-stamped QC_DRAINED
+work count, the per-item trigger() fallback, and ``LkSystem``'s
+``runtime="mega"`` knob end to end through the dispatcher's
+chunk-boundary preemption path.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core.mega import MegaRuntime, mega_work_classes
+from repro.core.persistent import ExecutableCache, PersistentRuntime
+from repro.kernels.persistent import (OP_ADD, OP_COPY, OP_MATMUL, OP_NOP,
+                                      OP_REDUCE, OP_RELU, OP_SCALE,
+                                      TILE_OP_NAMES, TILE_RESULT_TEMPLATE,
+                                      pack_args, pack_scale, tile_state,
+                                      tile_work_table)
+from repro.system import LkSystem, WorkClass
+
+# one compile of the drain executable serves every MegaRuntime below
+# (same workspace shapes + queue capacity -> same cache key)
+_CACHE = ExecutableCache()
+NBUF, SEED, QCAP = 4, 1, 8
+
+
+class FakeDev:
+    def __init__(self, i):
+        self.id = i
+
+
+def devs(n):
+    return [FakeDev(i) for i in range(n)]
+
+
+def mixed_descs():
+    """Every opcode once, with a chunked reduce mid-queue whose first
+    chunk must stamp THREAD_PREEMPTED between two FINISHED neighbours."""
+    return [
+        mb.WorkDescriptor(opcode=OP_MATMUL, request_id=10,
+                          arg0=pack_args(3, 0, 1)[0],
+                          arg1=pack_args(3, 0, 1)[1]),
+        mb.WorkDescriptor(opcode=OP_REDUCE, request_id=11,
+                          arg0=pack_args(0, 2)[0], n_chunks=3),
+        mb.WorkDescriptor(opcode=OP_ADD, request_id=12,
+                          arg0=pack_args(2, 0, 1)[0],
+                          arg1=pack_args(2, 0, 1)[1]),
+        mb.WorkDescriptor(opcode=OP_SCALE, request_id=13,
+                          arg0=pack_scale(1, 1, 0.5)[0],
+                          arg1=pack_scale(1, 1, 0.5)[1]),
+        mb.WorkDescriptor(opcode=OP_RELU, request_id=14,
+                          arg0=pack_args(0, 3)[0]),
+        mb.WorkDescriptor(opcode=OP_COPY, request_id=15,
+                          arg0=pack_args(1, 2)[0]),
+        mb.WorkDescriptor(opcode=OP_NOP, request_id=16),
+    ]
+
+
+def boot_mega(max_inflight=64, max_steps=QCAP):
+    rt = MegaRuntime(max_inflight=max_inflight, max_steps=max_steps,
+                     exec_cache=_CACHE)
+    rt.boot(tile_state(NBUF, seed=SEED))
+    return rt
+
+
+def boot_scan(max_inflight=64, max_steps=QCAP):
+    rt = PersistentRuntime(tile_work_table(),
+                           result_template=TILE_RESULT_TEMPLATE,
+                           max_inflight=max_inflight, max_steps=max_steps)
+    rt.boot(tile_state(NBUF, seed=SEED))
+    return rt
+
+
+def retire_all(rt, descs, batched=True):
+    if batched:
+        rt.trigger_many(descs)
+    else:
+        for d in descs:
+            rt.trigger(d)
+    out = [(np.asarray(res), np.asarray(fg)) for res, fg in rt.wait_all()]
+    rt.dispose()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# token identity vs the scan path
+# ---------------------------------------------------------------------------
+
+def test_mega_matches_scan_token_identical():
+    descs = mixed_descs()
+    mega = retire_all(boot_mega(), descs)
+    scan = retire_all(boot_scan(), descs)
+    assert len(mega) == len(scan) == len(descs)
+    for (mres, mfg), (sres, sfg) in zip(mega, scan):
+        np.testing.assert_array_equal(mfg, sfg)      # byte-identical acks
+        np.testing.assert_allclose(mres, sres, rtol=1e-4, atol=1e-4)
+    statuses = [int(fg[mb.W_STATUS]) for _, fg in mega]
+    assert statuses == [mb.THREAD_FINISHED, mb.THREAD_PREEMPTED,
+                        mb.THREAD_FINISHED, mb.THREAD_FINISHED,
+                        mb.THREAD_FINISHED, mb.THREAD_FINISHED,
+                        mb.THREAD_FINISHED]
+    assert [int(fg[mb.W_REQID]) for _, fg in mega] == \
+        [d.request_id for d in descs]
+
+
+def test_mega_chunked_carry_resumes_across_launches():
+    """A 3-chunk reduce re-triggered chunk by chunk (three separate drain
+    launches) threads the device-resident carry exactly like the scan
+    loop's per-opcode carry: same trajectory, same PREEMPTED/FINISHED
+    stamps, same from_gpu words."""
+    d0 = mb.WorkDescriptor(opcode=OP_REDUCE, request_id=40,
+                           arg0=pack_args(0, 2)[0], n_chunks=3)
+    chain = [d0, d0.advance(), d0.advance().advance()]
+    mega = retire_all(boot_mega(), chain, batched=False)
+    scan = retire_all(boot_scan(), chain, batched=False)
+    for (mres, mfg), (sres, sfg) in zip(mega, scan):
+        np.testing.assert_array_equal(mfg, sfg)
+        np.testing.assert_allclose(mres, sres, rtol=1e-4, atol=1e-4)
+    s = float(np.sum(np.asarray(tile_state(NBUF, seed=SEED)["ws"])[2]))
+    np.testing.assert_allclose([r[0] for r, _ in mega],
+                               [s, 2 * s, 3 * s], rtol=1e-4)
+    assert [int(fg[mb.W_STATUS]) for _, fg in mega] == \
+        [mb.THREAD_PREEMPTED, mb.THREAD_PREEMPTED, mb.THREAD_FINISHED]
+    assert [int(fg[mb.W_CHUNK]) for _, fg in mega] == [0, 1, 2]
+
+
+def test_mega_batch_splits_and_work_drained():
+    """N > max_steps splits into ceil(N/Q) drain launches; the
+    device-stamped QC_DRAINED totals exactly N after full retirement
+    (NOP padding rows never count)."""
+    rt = boot_mega(max_steps=4)
+    descs = [mb.WorkDescriptor(opcode=OP_RELU, request_id=i,
+                               arg0=pack_args(1, 0)[0])
+             for i in range(10)]
+    assert rt.trigger_many(descs) == 10
+    assert rt.doorbells == 3                   # 4 + 4 + 2
+    assert rt.batched_steps == 10
+    assert rt.work_drained == 0                # nothing read back yet
+    out = rt.wait_all()
+    assert [int(fg[mb.W_REQID]) for _, fg in out] == list(range(10))
+    assert rt.work_drained == 10
+    rt.dispose()
+
+
+def test_mega_trigger_single_item_fallback():
+    """trigger() — the dispatcher's per-item fallback lane — is a
+    one-row queue through the same drain launch."""
+    rt = boot_mega()
+    rt.trigger(mb.WorkDescriptor(opcode=OP_COPY, request_id=7,
+                                 arg0=pack_args(1, 0)[0]))
+    res, fg = rt.wait()
+    assert int(fg[mb.W_STATUS]) == mb.THREAD_FINISHED
+    assert int(fg[mb.W_REQID]) == 7
+    s = float(np.sum(np.asarray(tile_state(NBUF, seed=SEED)["ws"])[0]))
+    np.testing.assert_allclose(float(res[0]), s, rtol=1e-4)
+    assert rt.work_drained == 1
+    rt.dispose()
+
+
+def test_mega_errors_and_capacity():
+    rt = MegaRuntime(exec_cache=_CACHE)
+    with pytest.raises(RuntimeError, match="boot"):
+        rt.trigger_many([mb.WorkDescriptor(opcode=OP_NOP)])
+    with pytest.raises(ValueError, match="ws"):
+        rt.boot({"ws": jnp.zeros((2, 8, 8), jnp.float32)})
+    with pytest.raises(ValueError, match="max_steps"):
+        MegaRuntime(max_steps=0)
+    rt = boot_mega(max_inflight=2)
+    assert rt.trigger_many([]) == 0
+    with pytest.raises(RuntimeError, match="capacity"):
+        rt.trigger_many([mb.WorkDescriptor(opcode=OP_NOP, request_id=i)
+                         for i in range(3)])
+    rt.dispose()
+
+
+def test_mega_work_classes_helper():
+    classes = mega_work_classes(matmul={"wcet_us": 123.0})
+    assert [c.name for c in classes] == list(TILE_OP_NAMES)
+    assert classes[1].wcet_us == 123.0
+    assert classes[OP_REDUCE].carry is not None     # reduce threads one
+    assert all(c.carry is None for i, c in enumerate(classes)
+               if i != OP_REDUCE)
+    with pytest.raises(KeyError, match="zap"):
+        mega_work_classes(zap={"wcet_us": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# LkSystem runtime="mega" end to end
+# ---------------------------------------------------------------------------
+
+def make_mega_system(**kw):
+    kw.setdefault("devices", devs(2))
+    kw.setdefault("n_clusters", 1)
+    kw.setdefault("state_factory", lambda cl: tile_state(NBUF, seed=2))
+    kw.setdefault("result_template", TILE_RESULT_TEMPLATE)
+    kw.setdefault("work_classes", mega_work_classes())
+    kw.setdefault("runtime", "mega")
+    kw.setdefault("max_inflight", 8)
+    return LkSystem(**kw)
+
+
+def test_system_mega_end_to_end_matches_scan():
+    """The same submissions — one matmul plus a 3-chunk reduce resolved
+    through the dispatcher's chunk-boundary preemption path — produce the
+    same ticket results under runtime='mega' and runtime='scan'."""
+    outs = {}
+    for runtime in ("mega", "scan"):
+        sys_ = make_mega_system(runtime=runtime).boot()
+        t_mm = sys_.submit("matmul", arg0=pack_args(3, 0, 1)[0],
+                           arg1=pack_args(3, 0, 1)[1])
+        t_red = sys_.submit("reduce", arg0=pack_args(2, 2)[0], n_chunks=3)
+        sys_.drain()
+        assert t_mm.done() and t_red.done()
+        outs[runtime] = (float(t_mm.result()[0]), float(t_red.result()[0]))
+        if runtime == "mega":
+            rt = list(sys_.runtimes.values())[0]
+            assert rt.work_drained >= 4     # 1 matmul + 3 reduce chunks
+        sys_.dispose()
+    np.testing.assert_allclose(outs["mega"], outs["scan"],
+                               rtol=1e-4, atol=1e-4)
+    ws = np.asarray(tile_state(NBUF, seed=2)["ws"])
+    np.testing.assert_allclose(outs["mega"][1], 3 * float(ws[2].sum()),
+                               rtol=1e-4)
+
+
+def test_system_mega_rejects_non_prefix_classes():
+    sys_ = make_mega_system(
+        work_classes=[WorkClass("zzz", fn=lambda s, d: (s, jnp.zeros((1,),
+                                                        jnp.float32)))])
+    with pytest.raises(ValueError, match="prefix"):
+        sys_.boot()
+    # order matters too, not just membership
+    wrong_order = [mega_work_classes()[1], mega_work_classes()[0]]
+    with pytest.raises(ValueError, match="prefix"):
+        make_mega_system(work_classes=wrong_order).boot()
