@@ -82,10 +82,15 @@ def _row_record(row: str, prev: dict[str, float] | None = None) -> dict:
     # teardown off the dispose hot path (deferred to ``reap``), and the
     # prev= tag is what shows the ~1890µs -> O(µs) drop in-band.
     # ``*_per_sec`` throughput rows (PR 9's drain-megakernel rate) track
-    # the same way: a rate regression shows as prev > current in-band
+    # the same way: a rate regression shows as prev > current in-band.
+    # ``*_p99_us`` tail rows and ``*_overhead_pct`` instrumentation-cost
+    # rows (PR 10's flight recorder) are trajectory-tracked too: a tail
+    # or probe-cost creep is exactly the regression these exist to catch
     if prev and name in prev and (name.endswith("_speedup")
                                   or name.endswith("_lk_dispose")
-                                  or name.endswith("_per_sec")):
+                                  or name.endswith("_per_sec")
+                                  or name.endswith("_p99_us")
+                                  or name.endswith("_overhead_pct")):
         tag = f"prev={prev[name]:g}"
         derived = f"{derived},{tag}" if derived else tag
     return {"name": name, "us_per_call": us, "derived": derived}

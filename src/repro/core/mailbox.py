@@ -49,6 +49,26 @@ chunk (the per-descriptor quantum), and stamps a per-row from_gpu ack
 (status / request id / chunk progress) that the zero-readback retire
 path consumes. ``QC_DRAINED`` carries the aggregate work count so ack
 rows stay byte-identical to the scan path's per-step from_gpu records.
+
+Flight-recorder profile rows (device-side instrumentation): the profiled
+kernel variants append a PARALLEL ``(Q, PROF_WIDTH)`` int32 buffer — the
+ack rows stay byte-identical to the bare path — where row *i* records the
+device-side view of descriptor *i*'s chunk:
+  [P_TICK0]  begin tick (monotone per-cluster logical quantum counter,
+             threaded launch-to-launch through ``input_output_aliases``
+             like the carry; +1 per executed row)
+  [P_TICK1]  end tick (== begin + 1 for one chunk quantum)
+  [P_ROW]    per-launch row counter: how many work rows this launch had
+             already executed when this one began (0, 1, 2, ...)
+  [P_QDEPTH] queue occupancy at pop: work rows still waiting (inclusive
+             of this one) when the worker picked the row up
+  [P_OPCODE] the executed opcode    [P_REQID] the request id
+  [P_ACTIVE] 1 = this row executed, 0 = padding/skipped (other words
+             are undefined when 0)                      [P_PAD] reserved
+Ticks are LOGICAL (no wall clock exists device-side): the host maps them
+affinely into each launch's host window via a per-launch anchor
+(trigger -> materialize) and re-emits ``chunk_retire`` spans with
+``source=device`` (see repro.core.telemetry).
 """
 from __future__ import annotations
 
@@ -76,6 +96,11 @@ DESC_WIDTH = 10
 # --- megakernel queue-control words (module docstring, "Queue control") ------
 QCTRL_WIDTH = 4
 QC_HEAD, QC_TAIL, QC_STOP, QC_DRAINED = range(QCTRL_WIDTH)
+
+# --- flight-recorder profile words (module docstring, "Flight-recorder") -----
+PROF_WIDTH = 8
+(P_TICK0, P_TICK1, P_ROW, P_QDEPTH, P_OPCODE, P_REQID, P_ACTIVE,
+ P_PAD) = range(PROF_WIDTH)
 
 
 def queue_control(tail: int, head: int = 0, stop: int = 0) -> np.ndarray:

@@ -44,6 +44,7 @@ from repro.core import persistent as P
 from repro.core.persistent import (ExecutableCache, _Block,
                                    _PipelinedRuntime, _tree_key)
 from repro.core.telemetry import EV_RT_TRIGGER, TraceCollector
+from repro.core.telemetry.events import now_us
 from repro.core.wcet import WcetTracker
 from repro.kernels.persistent import kernel as K
 from repro.kernels.persistent.ops import TILE_OP_NAMES, tile_work_table
@@ -70,7 +71,8 @@ class MegaRuntime(_PipelinedRuntime):
                  max_steps: int = 8,
                  telemetry: Optional[TraceCollector] = None,
                  exec_cache: Optional[ExecutableCache] = None,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 profile: Optional[bool] = None):
         super().__init__(tracker=tracker, max_inflight=max_inflight,
                          telemetry=telemetry, name="mega")
         if max_steps < 1:
@@ -79,9 +81,15 @@ class MegaRuntime(_PipelinedRuntime):
         self.max_steps = int(max_steps)
         self._exec_cache = exec_cache
         self._interpret = interpret
+        # flight recorder (None = auto: on exactly when telemetry is
+        # attached): boots the profiled drain kernel, whose extra
+        # (Q, PROF_WIDTH) output and persistent tick counter join the
+        # bulk readback; ack rows stay byte-identical to the bare path
+        self._profile = profile
         self._drain = None
         self._ws = None                # (1, NBUF, TILE, TILE) f32
         self._carry = None             # (1, 1) f32 — device-resident
+        self._tick = None              # (1, 1) i32 — logical-tick counter
         # control outputs pending readback, FIFO-aligned with _inflight:
         # QC_DRAINED accumulates into work_drained at block retirement
         self._ctrl_pending: deque = deque()
@@ -108,6 +116,10 @@ class MegaRuntime(_PipelinedRuntime):
             interpret = self._interpret
             if interpret is None:
                 interpret = jax.default_backend() != "tpu"
+            if self._profile is None:
+                self._profile = self.telemetry is not None
+            tick0 = jax.device_put(jnp.zeros((1, 1), jnp.int32)) \
+                if self._profile else None
             Q = self.max_steps
             ctrl0 = jnp.zeros((1, mb.QCTRL_WIDTH), jnp.int32)
             ring0 = jnp.asarray(
@@ -115,10 +127,15 @@ class MegaRuntime(_PipelinedRuntime):
 
             def compile_drain():
                 fn = functools.partial(K.persistent_drain_pallas,
+                                       profile=self._profile,
                                        interpret=interpret)
+                if self._profile:
+                    return jax.jit(fn).lower(
+                        ctrl0, ring0, ws, carry, tick0).compile()
                 return jax.jit(fn).lower(ctrl0, ring0, ws, carry).compile()
 
-            key = ("mega_drain", _tree_key(ws), Q, bool(interpret),
+            key = ("mega_drain_prof" if self._profile else "mega_drain",
+                   _tree_key(ws), Q, bool(interpret),
                    mb.DESC_WIDTH, mb.QCTRL_WIDTH)
             if self._exec_cache is not None:
                 self._drain = self._exec_cache.get_or_compile(
@@ -127,6 +144,7 @@ class MegaRuntime(_PipelinedRuntime):
                 self._drain = compile_drain()
             self._ws = ws
             self._carry = carry
+            self._tick = tick0
         self.status = mb.THREAD_NOP
 
     # ------------------------------------------------------------------
@@ -156,13 +174,22 @@ class MegaRuntime(_PipelinedRuntime):
             ring = mb.descriptor_ring(block, self.max_steps)
             ctrl = mb.queue_control(tail=len(block))
             with self.tracker.phase("trigger"):
-                ws, carry, acks, results, ctrl_out = self._drain(
-                    jnp.asarray(ctrl)[None], jnp.asarray(ring)[None],
-                    self._ws, self._carry)
+                prof = None
+                if self._profile:
+                    (ws, carry, acks, results, ctrl_out, prof,
+                     self._tick) = self._drain(
+                        jnp.asarray(ctrl)[None], jnp.asarray(ring)[None],
+                        self._ws, self._carry, self._tick)
+                    prof = prof[0]
+                else:
+                    ws, carry, acks, results, ctrl_out = self._drain(
+                        jnp.asarray(ctrl)[None], jnp.asarray(ring)[None],
+                        self._ws, self._carry)
                 # async dispatch: return as soon as the drain is enqueued
                 self._ws = ws
                 self._carry = carry
-                blk = _Block(results[0], acks[0], len(block), True)
+                blk = _Block(results[0], acks[0], len(block), True,
+                             prof=prof, t_trigger_us=now_us())
                 self._inflight.append(blk)
                 self._ctrl_pending.append((blk, ctrl_out))
             self.doorbells += 1
@@ -202,12 +229,14 @@ class MegaRuntime(_PipelinedRuntime):
             held = (self._drain,)
             if self._inflight or self._ws is not None:
                 P._DEFERRED_TEARDOWN.append(
-                    (list(self._inflight), (self._ws, self._carry), held))
+                    (list(self._inflight),
+                     (self._ws, self._carry, self._tick), held))
             self._inflight.clear()
             self._oldest_ready = False
             self._ctrl_pending.clear()
             self._ws = None
             self._carry = None
+            self._tick = None
             self._drain = None
         self.status = mb.THREAD_EXIT
         if len(P._DEFERRED_TEARDOWN) > P._DEFERRED_CAP:

@@ -69,7 +69,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import mailbox as mb
-from repro.core.telemetry import EV_RT_RETIRE, EV_RT_TRIGGER, TraceCollector
+from repro.core.telemetry import (EV_CHUNK_RETIRE, EV_RT_RETIRE,
+                                  EV_RT_TRIGGER, TraceCollector)
+from repro.core.telemetry.events import now_us
 from repro.core.wcet import WcetTracker
 
 
@@ -151,7 +153,7 @@ def reap_deferred() -> int:
         # ExecutableCache the cache still holds them and the drop is free)
         blocks, trees, _executables = _DEFERRED_TEARDOWN.pop()
         for blk in blocks:
-            jax.block_until_ready((blk.results, blk.acks))
+            jax.block_until_ready((blk.results, blk.acks, blk.prof))
         for tree in trees:
             if tree is None:
                 continue
@@ -223,17 +225,27 @@ class _Block:
     ``stacked=False``) or a batched multi-step call whose stacked results
     and ack block retire item by item (``idx`` walks the block). The
     device arrays are swapped for host copies at materialization — ONE
-    readback per block, however many items it holds."""
+    readback per block, however many items it holds.
 
-    __slots__ = ("results", "acks", "n", "idx", "stacked", "host_acks")
+    ``prof`` optionally carries the flight-recorder profile rows of the
+    block's launch (``(n, PROF_WIDTH)`` or ``(PROF_WIDTH,)`` int32, see
+    ``core.mailbox``); they join the same bulk readback. ``t_trigger_us``
+    anchors the launch's host window for tick calibration."""
 
-    def __init__(self, results, acks, n: int, stacked: bool):
+    __slots__ = ("results", "acks", "n", "idx", "stacked", "host_acks",
+                 "prof", "host_prof", "t_trigger_us")
+
+    def __init__(self, results, acks, n: int, stacked: bool,
+                 prof=None, t_trigger_us: int = 0):
         self.results = results
         self.acks = acks
         self.n = n
         self.idx = 0
         self.stacked = stacked
         self.host_acks = None      # set at materialization
+        self.prof = prof
+        self.host_prof = None
+        self.t_trigger_us = t_trigger_us
 
     @property
     def remaining(self) -> int:
@@ -245,6 +257,8 @@ class _Block:
             return
         self.results = jax.block_until_ready(self.results)
         self.host_acks = np.asarray(self.acks)
+        if self.prof is not None:
+            self.host_prof = np.atleast_2d(np.asarray(self.prof))
         if self.stacked:
             # one bulk readback of the stacked results too: per-item
             # device gathers would re-pay a dispatch per retirement
@@ -288,6 +302,12 @@ class _PipelinedRuntime:
         # id is assigned by whoever registers this runtime (LkSystem).
         self.telemetry = telemetry
         self.telemetry_cluster = -1
+        # flight-recorder anchor: host end of the previously retired
+        # block — the next block's device ticks are mapped into
+        # [max(trigger, here), materialize] so per-cluster device spans
+        # never overlap across launches (monotone merged timeline)
+        self._last_block_end_us = 0.0
+        self.device_spans = 0          # device-stamped spans re-emitted
 
     @property
     def booted(self) -> bool:
@@ -316,8 +336,46 @@ class _PipelinedRuntime:
             return True
         blk = self._inflight[0]
         self._oldest_ready = blk.host_acks is not None or \
-            _tree_ready((blk.results, blk.acks))
+            _tree_ready((blk.results, blk.acks, blk.prof))
         return self._oldest_ready
+
+    def _retire_block_profile(self, blk: _Block) -> None:
+        """Decode a just-materialized block's flight-recorder rows and
+        re-emit them as ``chunk_retire`` spans with ``source=device``.
+
+        Device ticks are LOGICAL (no wall clock exists device-side); the
+        per-launch anchor maps them affinely into the block's host window
+        ``[max(trigger, previous block end), materialize]``, which keeps
+        every cluster's merged device+host timeline monotone."""
+        end = float(now_us())
+        start = max(float(blk.t_trigger_us), self._last_block_end_us)
+        if end < start + 1.0:
+            end = start + 1.0
+        self._last_block_end_us = end
+        prof = blk.host_prof
+        if prof is None or self.telemetry is None:
+            return
+        idxs = np.nonzero(prof[:, mb.P_ACTIVE])[0]
+        if idxs.size == 0:
+            return
+        acks = np.atleast_2d(blk.host_acks)
+        t0s = prof[idxs, mb.P_TICK0].astype(np.float64)
+        t1s = prof[idxs, mb.P_TICK1].astype(np.float64)
+        lo = float(t0s.min())
+        scale = (end - start) / max(float(t1s.max()) - lo, 1.0)
+        for j, i in enumerate(idxs):
+            s = float(start + (t0s[j] - lo) * scale)
+            d = float(max((t1s[j] - t0s[j]) * scale, 1.0))
+            self.telemetry.emit(
+                EV_CHUNK_RETIRE, cluster=self.telemetry_cluster,
+                request_id=int(prof[i, mb.P_REQID]),
+                opcode=int(prof[i, mb.P_OPCODE]),
+                chunk=int(acks[i, mb.W_CHUNK]),
+                source="device", start_us=s, dur_us=d,
+                tick=int(prof[i, mb.P_TICK0]),
+                row=int(prof[i, mb.P_ROW]),
+                qdepth=int(prof[i, mb.P_QDEPTH]))
+            self.device_spans += 1
 
     def wait(self):
         """Block until the oldest in-flight step completes; returns
@@ -327,7 +385,10 @@ class _PipelinedRuntime:
         assert self._inflight, "nothing in flight"
         blk = self._inflight[0]
         with self.tracker.phase("wait"):
+            first = blk.host_acks is None
             blk.materialize()
+            if first:
+                self._retire_block_profile(blk)
             result, from_gpu = blk.pop_item()
             if blk.remaining == 0:
                 self._inflight.popleft()
@@ -406,7 +467,8 @@ class PersistentRuntime(_PipelinedRuntime):
                  max_steps: int = 8,
                  telemetry: Optional[TraceCollector] = None,
                  exec_cache: Optional[ExecutableCache] = None,
-                 staged_cap: int = 4):
+                 staged_cap: int = 4,
+                 profile: Optional[bool] = None):
         super().__init__(tracker=tracker, max_inflight=max_inflight,
                          telemetry=telemetry, name="lk")
         if max_steps < 1:
@@ -432,6 +494,13 @@ class PersistentRuntime(_PipelinedRuntime):
         self._compiled = None
         self._compiled_multi = None    # lazy: first trigger_many compiles it
         self._advance = None           # compiled device-side chunk advance
+        # flight recorder (None = auto: on exactly when telemetry is
+        # attached): the profiled step variants thread a persistent
+        # logical-tick scalar and return per-step PROF_WIDTH rows that
+        # join the block's bulk readback — the bare programs and their
+        # ack records are untouched when off
+        self._profile = profile
+        self._tick = None
         # staged next-chunk descriptors (double buffer): key -> device vec
         self._staged: dict[tuple[int, int], Any] = {}
         self._staged_cap = int(staged_cap)
@@ -498,6 +567,47 @@ class PersistentRuntime(_PipelinedRuntime):
             body, (state, carries), ring)
         return state, carries, results, acks
 
+    def _lk_step_prof(self, state, carries, tick, desc,
+                      row_idx=0, qdepth=1):
+        """``_lk_step`` plus the flight-recorder words: stamps a
+        PROF_WIDTH profile row (begin/end tick, per-launch row counter,
+        queue occupancy at pop — see ``core.mailbox``) and advances the
+        persistent logical-tick scalar by one per work step. The ack
+        record is byte-identical to the bare step's."""
+        state, carries, result, from_gpu = self._lk_step(
+            state, carries, desc)
+        act = (desc[mb.W_STATUS] >= mb.THREAD_WORK).astype(jnp.int32)
+        prof = jnp.zeros((mb.PROF_WIDTH,), jnp.int32)
+        prof = prof.at[mb.P_TICK0].set(act * tick)
+        prof = prof.at[mb.P_TICK1].set(act * (tick + 1))
+        prof = prof.at[mb.P_ROW].set(act * row_idx)
+        prof = prof.at[mb.P_QDEPTH].set(act * qdepth)
+        prof = prof.at[mb.P_OPCODE].set(act * desc[mb.W_OPCODE])
+        prof = prof.at[mb.P_REQID].set(act * desc[mb.W_REQID])
+        prof = prof.at[mb.P_ACTIVE].set(act)
+        return state, carries, tick + act, result, from_gpu, prof
+
+    def _lk_multi_step_prof(self, state, carries, tick, ring):
+        """Profiled twin of ``_lk_multi_step``: the scan carry also
+        threads the tick scalar and a seen-work counter, so each row's
+        profile record gets its launch-row index and the ring occupancy
+        at pop (total work rows minus work already consumed) — all
+        computed device-side."""
+        total = jnp.sum(
+            (ring[:, mb.W_STATUS] >= mb.THREAD_WORK).astype(jnp.int32))
+
+        def body(sc, desc):
+            state, carries, tick, seen = sc
+            state, carries, tick, result, from_gpu, prof = \
+                self._lk_step_prof(state, carries, tick, desc,
+                                   row_idx=seen, qdepth=total - seen)
+            seen = seen + (desc[mb.W_STATUS] >=
+                           mb.THREAD_WORK).astype(jnp.int32)
+            return (state, carries, tick, seen), (result, from_gpu, prof)
+        (state, carries, tick, _), (results, acks, profs) = jax.lax.scan(
+            body, (state, carries, tick, jnp.int32(0)), ring)
+        return state, carries, tick, results, acks, profs
+
     # ------------------------------------------------------------------
     def _cache_key(self, variant: str, state, carries) -> tuple:
         """ExecutableCache key for this runtime's ``variant`` program.
@@ -506,7 +616,7 @@ class PersistentRuntime(_PipelinedRuntime):
         return (variant, self._orig_fns, _tree_key(self._result_template),
                 _tree_key(state), _tree_key(carries), bool(self._donate),
                 mb.DESC_WIDTH,
-                self.max_steps if variant == "multi" else 0)
+                self.max_steps if variant.startswith("multi") else 0)
 
     def boot(self, state) -> None:
         """Init phase: compile the persistent step and make state resident.
@@ -534,8 +644,15 @@ class PersistentRuntime(_PipelinedRuntime):
             # from the same object (LkSystem boots one per cluster)
             carries = jax.device_put(tuple(
                 jax.tree.map(jnp.array, t) for t in self._carry_templates))
+            if self._profile is None:
+                self._profile = self.telemetry is not None
+            tick0 = jax.device_put(jnp.zeros((), jnp.int32)) \
+                if self._profile else None
 
             def compile_step():
+                if self._profile:
+                    return jax.jit(self._lk_step_prof, **kwargs).lower(
+                        state, carries, tick0, desc0).compile()
                 return jax.jit(self._lk_step, **kwargs).lower(
                     state, carries, desc0).compile()
 
@@ -544,9 +661,10 @@ class PersistentRuntime(_PipelinedRuntime):
                     lambda d: d.at[mb.W_CHUNK].add(1)).lower(
                         desc0).compile()
 
+            variant = "step_prof" if self._profile else "step"
             if self._exec_cache is not None and self.mesh is None:
                 self._compiled = self._exec_cache.get_or_compile(
-                    self._cache_key("step", state, carries), compile_step)
+                    self._cache_key(variant, state, carries), compile_step)
                 self._advance = self._exec_cache.get_or_compile(
                     ("advance", mb.DESC_WIDTH), compile_advance)
             else:
@@ -555,6 +673,7 @@ class PersistentRuntime(_PipelinedRuntime):
                 self._advance = compile_advance()
             self._state = state
             self._carries = carries
+            self._tick = tick0
         self.status = mb.THREAD_NOP
 
     def _ensure_multi(self):
@@ -569,12 +688,18 @@ class PersistentRuntime(_PipelinedRuntime):
                 np.tile(mb.nop_descriptor(), (self.max_steps, 1)))
 
             def compile_multi():
+                if self._profile:
+                    return jax.jit(
+                        self._lk_multi_step_prof, **kwargs).lower(
+                            self._state, self._carries, self._tick,
+                            ring0).compile()
                 return jax.jit(self._lk_multi_step, **kwargs).lower(
                     self._state, self._carries, ring0).compile()
 
+            variant = "multi_prof" if self._profile else "multi"
             if self._exec_cache is not None and self.mesh is None:
                 self._compiled_multi = self._exec_cache.get_or_compile(
-                    self._cache_key("multi", self._state, self._carries),
+                    self._cache_key(variant, self._state, self._carries),
                     compile_multi)
             else:
                 self._compiled_multi = compile_multi()
@@ -639,12 +764,20 @@ class PersistentRuntime(_PipelinedRuntime):
                 dvec = jnp.asarray(enc if enc is not None
                                    else desc.encode())
             self._stage_next(rid, chunk, n_chunks, dvec)
-            new_state, new_carries, result, from_gpu = self._compiled(
-                self._state, self._carries, dvec)
+            prof = None
+            if self._profile:
+                (new_state, new_carries, self._tick, result, from_gpu,
+                 prof) = self._compiled(
+                    self._state, self._carries, self._tick, dvec)
+            else:
+                new_state, new_carries, result, from_gpu = self._compiled(
+                    self._state, self._carries, dvec)
             # async dispatch: we return as soon as the work is enqueued
             self._state = new_state
             self._carries = new_carries
-            self._inflight.append(_Block(result, from_gpu, 1, False))
+            self._inflight.append(_Block(result, from_gpu, 1, False,
+                                         prof=prof,
+                                         t_trigger_us=now_us()))
         self.tracker.record_depth(self.inflight)
         if self.telemetry is not None:
             self.telemetry.emit(
@@ -676,12 +809,19 @@ class PersistentRuntime(_PipelinedRuntime):
             ring = mb.descriptor_ring(block, self.max_steps)
             with self.tracker.phase("trigger"):
                 ring_dev = jnp.asarray(ring)
-                new_state, new_carries, results, acks = fn(
-                    self._state, self._carries, ring_dev)
+                profs = None
+                if self._profile:
+                    (new_state, new_carries, self._tick, results, acks,
+                     profs) = fn(self._state, self._carries, self._tick,
+                                 ring_dev)
+                else:
+                    new_state, new_carries, results, acks = fn(
+                        self._state, self._carries, ring_dev)
                 self._state = new_state
                 self._carries = new_carries
                 self._inflight.append(
-                    _Block(results, acks, len(block), True))
+                    _Block(results, acks, len(block), True, prof=profs,
+                           t_trigger_us=now_us()))
             self.doorbells += 1
             self.batched_steps += len(block)
             self.steps += len(block)
@@ -744,14 +884,15 @@ class PersistentRuntime(_PipelinedRuntime):
                     or self._carries is not None \
                     or any(x is not None for x in held):
                 _DEFERRED_TEARDOWN.append(
-                    (list(self._inflight), (self._state, self._carries),
-                     held))
+                    (list(self._inflight),
+                     (self._state, self._carries, self._tick), held))
             self._inflight.clear()
             self._oldest_ready = False
             self._staged.clear()
             self._live_rids.clear()
             self._state = None
             self._carries = None
+            self._tick = None
             self._compiled = None
             self._compiled_multi = None
             self._advance = None

@@ -135,7 +135,8 @@ class LkSystem:
                  warm_pool: int = 0,
                  exec_cache: Optional[ExecutableCache] = None,
                  runtime: str = "scan",
-                 staged_cap: int = 4):
+                 staged_cap: int = 4,
+                 profile: Optional[bool] = None):
         if runtime not in ("scan", "mega"):
             raise ValueError(
                 f"runtime must be 'scan' or 'mega', got {runtime!r}")
@@ -161,6 +162,9 @@ class LkSystem:
         # both, so dispatcher semantics (preemption, replay) are shared.
         self._runtime = runtime
         self._staged_cap = int(staged_cap)
+        # flight recorder: None = per-runtime auto (on exactly when a
+        # telemetry collector is attached); True/False force it
+        self._profile = profile
         self._heal = heal
         self._policy = policy
         self._preemptive = preemptive
@@ -547,7 +551,8 @@ class LkSystem:
                 max_inflight=self._max_inflight,
                 max_steps=self._max_steps,
                 telemetry=self.telemetry,
-                exec_cache=self.exec_cache)
+                exec_cache=self.exec_cache,
+                profile=self._profile)
             rt.boot(self._state_factory(cl))
             return rt
         shardings = (self._shardings_factory(cl)
@@ -563,7 +568,8 @@ class LkSystem:
             donate=self._donate,
             telemetry=self.telemetry,
             exec_cache=self.exec_cache,
-            staged_cap=self._staged_cap)
+            staged_cap=self._staged_cap,
+            profile=self._profile)
         rt.boot(self._state_factory(cl))
         return rt
 

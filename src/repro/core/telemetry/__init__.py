@@ -15,7 +15,14 @@ package is what makes both OBSERVABLE and CHECKED at runtime:
 * :class:`LogHistogram` — the bounded-memory quantile estimator behind
   the histograms (and the ``wcet_quantile=`` admission estimator);
 * exporters — Chrome/Perfetto trace JSON and CSV
-  (``TraceCollector.export_chrome`` / ``export_csv``).
+  (``TraceCollector.export_chrome`` / ``export_csv``), with device-
+  stamped spans (``source=device``) on parallel per-cluster tracks;
+* :class:`MetricsRegistry` / :class:`MetricsPump` — the continuous
+  surface: named counters/gauges/histograms fed live from the flight
+  recorder's device spans, per-cluster utilization/occupancy gauges,
+  Prometheus-text + JSON-lines exposition, background sampling pump
+  (``launch/serve.py --metrics-port / --metrics-file``; viewed live by
+  ``launch/top.py``).
 
 Wire-up: pass one collector as ``telemetry=`` to ``Dispatcher``,
 ``LkSystem``, or ``ServingEngine`` (see ARCHITECTURE.md "Telemetry &
@@ -28,19 +35,26 @@ from repro.core.telemetry.events import (
     EV_RT_RETIRE, EV_RT_TRIGGER, EV_SHED, EV_STREAM, EV_SUBMIT, EV_TRIGGER,
     EVENT_KINDS, Event, TraceCollector,
 )
-from repro.core.telemetry.export import chrome_trace, write_chrome, write_csv
+from repro.core.telemetry.export import (
+    DEVICE_PID_BASE, chrome_trace, write_chrome, write_csv,
+)
 from repro.core.telemetry.histogram import LogHistogram
+from repro.core.telemetry.metrics import (
+    Counter, Gauge, Histogram, MetricsPump, MetricsRegistry,
+)
 from repro.core.telemetry.monitor import (
     BOUND_VIOLATION, DEADLINE_MISS, WCET_OVERRUN, BoundMonitor, Violation,
 )
 
 __all__ = [
-    "BOUND_VIOLATION", "BoundMonitor", "DEADLINE_MISS", "EVENT_KINDS",
+    "BOUND_VIOLATION", "BoundMonitor", "Counter", "DEADLINE_MISS",
+    "DEVICE_PID_BASE", "EVENT_KINDS",
     "EV_ADMIT", "EV_CANCEL", "EV_CHUNK_RETIRE", "EV_ENGINE", "EV_FAIL",
     "EV_HEAL", "EV_PREEMPT", "EV_RECARVE", "EV_REJECT", "EV_REQUEUE",
     "EV_RESOLVE",
     "EV_RT_RETIRE", "EV_RT_TRIGGER", "EV_SHED", "EV_STREAM", "EV_SUBMIT",
     "EV_TRIGGER",
-    "Event", "LogHistogram", "TraceCollector", "Violation", "WCET_OVERRUN",
+    "Event", "Gauge", "Histogram", "LogHistogram", "MetricsPump",
+    "MetricsRegistry", "TraceCollector", "Violation", "WCET_OVERRUN",
     "chrome_trace", "write_chrome", "write_csv",
 ]

@@ -26,6 +26,7 @@ O(log range), the monitor ledger is a deque.
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Optional
@@ -107,7 +108,16 @@ class TraceCollector:
         self._names: dict[int, str] = {}
         self._sources: dict[str, Callable[[], dict]] = {}
         self._subscribers: list[Callable[[Event], None]] = []
-        self.subscriber_errors: list[BaseException] = []
+        # subscriber exceptions: exact count + a bounded rolling window
+        # (a persistently-raising observer on a hot emit path must not
+        # grow memory without limit); warn ONCE per collector each.
+        self.subscriber_errors: deque[BaseException] = deque(
+            maxlen=self.SUBSCRIBER_ERROR_WINDOW)
+        self.subscriber_error_count = 0
+        self._warned_subscriber = False
+        self._warned_overflow = False
+
+    SUBSCRIBER_ERROR_WINDOW = 64
 
     # -- events ---------------------------------------------------------
     def emit(self, kind: str, *, t_us: Optional[int] = None,
@@ -116,6 +126,13 @@ class TraceCollector:
         """Append one event; oldest events drop (counted) past capacity."""
         if len(self._events) == self.capacity:
             self.dropped_events += 1
+            if not self._warned_overflow:
+                self._warned_overflow = True
+                warnings.warn(
+                    f"TraceCollector ring overflowed (capacity="
+                    f"{self.capacity}): oldest events are dropping — "
+                    "counted on dropped_events; raise capacity= to keep "
+                    "the full window", RuntimeWarning, stacklevel=2)
         ev = Event(kind=kind,
                    t_us=t_us if t_us is not None else self._clock(),
                    cluster=cluster, request_id=request_id, opcode=opcode,
@@ -126,7 +143,15 @@ class TraceCollector:
             try:
                 fn(ev)
             except Exception as e:   # a raising observer must not lose work
+                self.subscriber_error_count += 1
                 self.subscriber_errors.append(e)
+                if not self._warned_subscriber:
+                    self._warned_subscriber = True
+                    warnings.warn(
+                        f"TraceCollector subscriber raised {e!r}; further "
+                        "errors are counted (subscriber_error_count) and "
+                        f"only the last {self.SUBSCRIBER_ERROR_WINDOW} "
+                        "are retained", RuntimeWarning, stacklevel=2)
         return ev
 
     def subscribe(self, fn: Callable[[Event], None]) -> None:
@@ -213,7 +238,8 @@ class TraceCollector:
         (``monitor.<k>``), and every registered component snapshot
         (``<label>.<k>``) — the single surface replacing counter-grepping
         across dispatcher/mailbox/monitor attributes."""
-        out = {"dropped_events": self.dropped_events}
+        out = {"dropped_events": self.dropped_events,
+               "subscriber_error_count": self.subscriber_error_count}
         for kind in sorted(self._kind_counts):
             out[f"events.{kind}"] = self._kind_counts[kind]
         for k, v in self.monitor.counts().items():

@@ -11,6 +11,11 @@ The Chrome exporter emits the Trace Event Format that both
   cluster's process track);
 * instants — submit/trigger/preempt/cancel/shed/requeue are thread-scope
   instant events (``ph: "i"``); fail/heal are process-scope;
+* device tracks — a span carrying ``source=device`` (the flight
+  recorder's re-emitted in-kernel timestamps) lands on a PARALLEL
+  process track (``pid = DEVICE_PID_BASE + cluster``, named
+  "cluster N (device)"), so the device's view of each launch sits
+  directly under the host's spans for the same tickets;
 * metadata — cluster and request tracks are named for the UI.
 
 The CSV exporter is the flat analyst view: one row per event, stable
@@ -26,10 +31,15 @@ from repro.core.telemetry.events import (
     EV_CHUNK_RETIRE, EV_FAIL, EV_HEAL, EV_RESOLVE, Event,
 )
 
-__all__ = ["chrome_trace", "write_chrome", "write_csv"]
+__all__ = ["chrome_trace", "write_chrome", "write_csv", "DEVICE_PID_BASE"]
 
 _SPAN_KINDS = (EV_CHUNK_RETIRE, EV_RESOLVE)
 _PROCESS_SCOPE = (EV_FAIL, EV_HEAL)
+
+# device-stamped spans render on their own per-cluster process track:
+# pid = DEVICE_PID_BASE + cluster (host clusters are small ints, so the
+# namespaces cannot collide in practice)
+DEVICE_PID_BASE = 10_000
 
 
 def _span_name(ev: Event, name_of: Callable[[int], str]) -> str:
@@ -47,11 +57,16 @@ def chrome_trace(events: Iterable[Event],
         name_of = lambda op: f"op{op}"                      # noqa: E731
     out: list[dict] = []
     pids: set[int] = set()
+    device_pids: set[int] = set()
     tids: set[tuple[int, int]] = set()
     for ev in events:
         pid = ev.cluster if ev.cluster >= 0 else 0
+        if ev.extra.get("source") == "device":
+            pid = DEVICE_PID_BASE + pid
+            device_pids.add(pid)
+        else:
+            pids.add(pid)
         tid = ev.request_id if ev.request_id >= 0 else 0
-        pids.add(pid)
         tids.add((pid, tid))
         args = {"request_id": ev.request_id, "opcode": ev.opcode}
         if ev.chunk >= 0:
@@ -75,6 +90,10 @@ def chrome_trace(events: Iterable[Event],
     for pid in sorted(pids):
         out.append({"name": "process_name", "ph": "M", "pid": pid,
                     "args": {"name": f"cluster {pid}"}})
+    for pid in sorted(device_pids):
+        out.append({"name": "process_name", "ph": "M", "pid": pid,
+                    "args": {"name":
+                             f"cluster {pid - DEVICE_PID_BASE} (device)"}})
     for pid, tid in sorted(tids):
         out.append({"name": "thread_name", "ph": "M", "pid": pid,
                     "tid": tid, "args": {"name": f"ticket {tid}"}})

@@ -6,7 +6,9 @@ from repro.kernels.persistent.kernel import (NUM_DRAIN_OPS, NUM_OPS, OP_ADD,
 from repro.kernels.persistent.ops import (TILE_OP_NAMES,
                                           TILE_RESULT_TEMPLATE, build_queue,
                                           persistent_drain,
+                                          persistent_drain_prof,
                                           persistent_execute, tile_state,
                                           tile_work_table)
-from repro.kernels.persistent.ref import (persistent_drain_ref,
+from repro.kernels.persistent.ref import (persistent_drain_prof_ref,
+                                          persistent_drain_ref,
                                           persistent_execute_ref)

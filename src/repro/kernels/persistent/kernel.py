@@ -37,10 +37,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.core.mailbox import (DESC_WIDTH, QC_DRAINED, QC_HEAD, QC_STOP,
-                                QC_TAIL, QCTRL_WIDTH, THREAD_FINISHED,
-                                THREAD_NOP, THREAD_PREEMPTED, THREAD_WORK,
-                                W_ARG0, W_ARG1, W_CHUNK, W_NCHUNKS, W_OPCODE,
+from repro.core.mailbox import (DESC_WIDTH, P_ACTIVE, P_OPCODE, P_QDEPTH,
+                                P_REQID, P_ROW, P_TICK0, P_TICK1, PROF_WIDTH,
+                                QC_DRAINED, QC_HEAD, QC_STOP, QC_TAIL,
+                                QCTRL_WIDTH, THREAD_FINISHED, THREAD_NOP,
+                                THREAD_PREEMPTED, THREAD_WORK, W_ARG0,
+                                W_ARG1, W_CHUNK, W_NCHUNKS, W_OPCODE,
                                 W_REQID, W_STATUS)
 
 TILE = 128
@@ -161,15 +163,14 @@ def persistent_execute_pallas(queue, workspace, *, interpret: bool = False):
     return out, fromgpu
 
 
-def _drain_kernel(ctrl_ref, queue_ref, ws_ref, carry_ref, out_ref,
-                  carry_out_ref, ack_ref, res_ref, ctrl_out_ref):
-    """ctrl: (1, QCTRL_WIDTH) i32; queue: (1, Q, DESC_WIDTH) i32;
-    ws/out: (1, NBUF, T, T) f32 (aliased); carry: (1, 1) f32 (aliased) —
-    the resumable reduction accumulator threaded across rows AND launches.
-    ack: (1, Q, DESC_WIDTH) i32 per-row from_gpu records; res: (1, Q, 1)
-    f32 per-row results; ctrl_out: ctrl with QC_DRAINED stamped."""
-    out_ref[...] = ws_ref[...]
-    carry_out_ref[...] = carry_ref[...]
+def _drain_body(ctrl_ref, queue_ref, out_ref, carry_out_ref, ack_ref,
+                res_ref, ctrl_out_ref, prof_ref=None, tick_out_ref=None):
+    """Shared drain loop of the bare and profiled kernels (out_ref /
+    carry_out_ref / tick_out_ref already hold their input copies).
+    When ``prof_ref`` is given, each row also stamps a flight-recorder
+    profile record (``PROF_WIDTH`` words, see core.mailbox) and
+    ``tick_out_ref`` advances the persistent logical-tick counter by one
+    per executed row — the ack rows stay byte-identical either way."""
     head = ctrl_ref[0, QC_HEAD]
     tail = ctrl_ref[0, QC_TAIL]
     stop = ctrl_ref[0, QC_STOP]
@@ -252,13 +253,57 @@ def _drain_kernel(ctrl_ref, queue_ref, ws_ref, carry_ref, out_ref,
         row = row.at[W_CHUNK].set(desc[W_CHUNK])
         row = row.at[W_NCHUNKS].set(desc[W_NCHUNKS])
         ack_ref[0, i] = row
-        return drained + active.astype(jnp.int32)
+        act = active.astype(jnp.int32)
+        if prof_ref is not None:
+            t0 = tick_out_ref[0, 0]
+            tick_out_ref[0, 0] = t0 + act
+            prow = jnp.zeros((PROF_WIDTH,), jnp.int32)
+            prow = prow.at[P_TICK0].set(act * t0)
+            prow = prow.at[P_TICK1].set(act * (t0 + 1))
+            prow = prow.at[P_ROW].set(act * drained)
+            # occupancy at pop: ring rows still pending, this one included
+            prow = prow.at[P_QDEPTH].set(act * (tail - i))
+            prow = prow.at[P_OPCODE].set(act * desc[W_OPCODE])
+            prow = prow.at[P_REQID].set(act * desc[W_REQID])
+            prow = prow.at[P_ACTIVE].set(act)
+            prof_ref[0, i] = prow
+        return drained + act
 
     drained = jax.lax.fori_loop(0, q_len, body, jnp.int32(0))
     ctrl_out_ref[0, :] = ctrl_ref[0, :].at[QC_DRAINED].set(drained)
 
 
-def persistent_drain_pallas(ctrl, queue, workspace, carry, *,
+def _drain_kernel(ctrl_ref, queue_ref, ws_ref, carry_ref, out_ref,
+                  carry_out_ref, ack_ref, res_ref, ctrl_out_ref):
+    """ctrl: (1, QCTRL_WIDTH) i32; queue: (1, Q, DESC_WIDTH) i32;
+    ws/out: (1, NBUF, T, T) f32 (aliased); carry: (1, 1) f32 (aliased) —
+    the resumable reduction accumulator threaded across rows AND launches.
+    ack: (1, Q, DESC_WIDTH) i32 per-row from_gpu records; res: (1, Q, 1)
+    f32 per-row results; ctrl_out: ctrl with QC_DRAINED stamped."""
+    out_ref[...] = ws_ref[...]
+    carry_out_ref[...] = carry_ref[...]
+    _drain_body(ctrl_ref, queue_ref, out_ref, carry_out_ref, ack_ref,
+                res_ref, ctrl_out_ref)
+
+
+def _drain_kernel_prof(ctrl_ref, queue_ref, ws_ref, carry_ref, tick_ref,
+                       out_ref, carry_out_ref, ack_ref, res_ref,
+                       ctrl_out_ref, prof_ref, tick_out_ref):
+    """The flight-recorder variant of ``_drain_kernel``: same queue drain
+    and byte-identical ack rows, plus a ``(1, Q, PROF_WIDTH)`` profile
+    output and a persistent ``(1, 1)`` i32 logical-tick counter (aliased
+    input → output like the carry, so ticks stay monotone across
+    launches)."""
+    out_ref[...] = ws_ref[...]
+    carry_out_ref[...] = carry_ref[...]
+    tick_out_ref[...] = tick_ref[...]
+    _drain_body(ctrl_ref, queue_ref, out_ref, carry_out_ref, ack_ref,
+                res_ref, ctrl_out_ref, prof_ref=prof_ref,
+                tick_out_ref=tick_out_ref)
+
+
+def persistent_drain_pallas(ctrl, queue, workspace, carry, tick=None, *,
+                            profile: bool = False,
                             interpret: bool = False):
     """One drain launch per cluster: execute queue rows ``[head, tail)``
     for one chunk each, device-stamping per-row acks.
@@ -266,20 +311,55 @@ def persistent_drain_pallas(ctrl, queue, workspace, carry, *,
     ctrl: (C, QCTRL_WIDTH) i32; queue: (C, Q, DESC_WIDTH) i32;
     workspace: (C, NBUF, T, T) f32; carry: (C, 1) f32.
     Returns (workspace', carry', acks (C, Q, DESC_WIDTH),
-    results (C, Q, 1), ctrl')."""
+    results (C, Q, 1), ctrl').
+
+    With ``profile=True`` the flight-recorder kernel runs instead:
+    ``tick`` (a (C, 1) i32 persistent logical-tick counter) is required,
+    and the return gains ``(..., prof (C, Q, PROF_WIDTH), tick')`` —
+    ack rows stay byte-identical to the bare path."""
     C, Q, W = queue.shape
     _, NBUF, T, _ = workspace.shape
     assert W == DESC_WIDTH and T == TILE
     assert ctrl.shape == (C, QCTRL_WIDTH)
     assert carry.shape == (C, 1)
 
+    if not profile:
+        return pl.pallas_call(
+            _drain_kernel,
+            grid=(C,),
+            in_specs=[
+                pl.BlockSpec((1, QCTRL_WIDTH), lambda c: (c, 0)),
+                pl.BlockSpec((1, Q, W), lambda c: (c, 0, 0)),
+                pl.BlockSpec((1, NBUF, T, T), lambda c: (c, 0, 0, 0)),
+                pl.BlockSpec((1, 1), lambda c: (c, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, NBUF, T, T), lambda c: (c, 0, 0, 0)),
+                pl.BlockSpec((1, 1), lambda c: (c, 0)),
+                pl.BlockSpec((1, Q, W), lambda c: (c, 0, 0)),
+                pl.BlockSpec((1, Q, 1), lambda c: (c, 0, 0)),
+                pl.BlockSpec((1, QCTRL_WIDTH), lambda c: (c, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct(workspace.shape, workspace.dtype),
+                jax.ShapeDtypeStruct((C, 1), jnp.float32),
+                jax.ShapeDtypeStruct((C, Q, W), jnp.int32),
+                jax.ShapeDtypeStruct((C, Q, 1), jnp.float32),
+                jax.ShapeDtypeStruct((C, QCTRL_WIDTH), jnp.int32),
+            ],
+            input_output_aliases={2: 0, 3: 1},
+            interpret=interpret,
+        )(ctrl, queue, workspace, carry)
+
+    assert tick is not None and tick.shape == (C, 1)
     return pl.pallas_call(
-        _drain_kernel,
+        _drain_kernel_prof,
         grid=(C,),
         in_specs=[
             pl.BlockSpec((1, QCTRL_WIDTH), lambda c: (c, 0)),
             pl.BlockSpec((1, Q, W), lambda c: (c, 0, 0)),
             pl.BlockSpec((1, NBUF, T, T), lambda c: (c, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda c: (c, 0)),
             pl.BlockSpec((1, 1), lambda c: (c, 0)),
         ],
         out_specs=[
@@ -288,6 +368,8 @@ def persistent_drain_pallas(ctrl, queue, workspace, carry, *,
             pl.BlockSpec((1, Q, W), lambda c: (c, 0, 0)),
             pl.BlockSpec((1, Q, 1), lambda c: (c, 0, 0)),
             pl.BlockSpec((1, QCTRL_WIDTH), lambda c: (c, 0)),
+            pl.BlockSpec((1, Q, PROF_WIDTH), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, 1), lambda c: (c, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct(workspace.shape, workspace.dtype),
@@ -295,7 +377,9 @@ def persistent_drain_pallas(ctrl, queue, workspace, carry, *,
             jax.ShapeDtypeStruct((C, Q, W), jnp.int32),
             jax.ShapeDtypeStruct((C, Q, 1), jnp.float32),
             jax.ShapeDtypeStruct((C, QCTRL_WIDTH), jnp.int32),
+            jax.ShapeDtypeStruct((C, Q, PROF_WIDTH), jnp.int32),
+            jax.ShapeDtypeStruct((C, 1), jnp.int32),
         ],
-        input_output_aliases={2: 0, 3: 1},
+        input_output_aliases={2: 0, 3: 1, 4: 6},
         interpret=interpret,
-    )(ctrl, queue, workspace, carry)
+    )(ctrl, queue, workspace, carry, tick)

@@ -59,6 +59,17 @@ def persistent_drain(ctrl, queue, workspace, carry, *,
                                      interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def persistent_drain_prof(ctrl, queue, workspace, carry, tick, *,
+                          interpret: bool | None = None):
+    """Jitted flight-recorder drain launch: the bare drain's outputs plus
+    ``(prof, tick')`` profile rows (see ``core.mailbox`` PROF_* words)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return K.persistent_drain_pallas(ctrl, queue, workspace, carry, tick,
+                                     profile=True, interpret=interpret)
+
+
 # -- scan-path twin of the drain kernel's opcode table ----------------------
 
 TILE_OP_NAMES = ("nop", "matmul", "add", "scale", "relu", "copy", "reduce")

@@ -4,10 +4,12 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mailbox import (DESC_WIDTH, QC_DRAINED, QC_HEAD, QC_STOP,
-                                QC_TAIL, QCTRL_WIDTH, THREAD_FINISHED,
-                                THREAD_NOP, THREAD_PREEMPTED, THREAD_WORK,
-                                W_ARG0, W_ARG1, W_CHUNK, W_NCHUNKS, W_OPCODE,
+from repro.core.mailbox import (DESC_WIDTH, P_ACTIVE, P_OPCODE, P_QDEPTH,
+                                P_REQID, P_ROW, P_TICK0, P_TICK1, PROF_WIDTH,
+                                QC_DRAINED, QC_HEAD, QC_STOP, QC_TAIL,
+                                QCTRL_WIDTH, THREAD_FINISHED, THREAD_NOP,
+                                THREAD_PREEMPTED, THREAD_WORK, W_ARG0,
+                                W_ARG1, W_CHUNK, W_NCHUNKS, W_OPCODE,
                                 W_REQID, W_STATUS)
 from repro.kernels.persistent.kernel import (NUM_DRAIN_OPS, NUM_OPS, OP_ADD,
                                              OP_COPY, OP_MATMUL, OP_NOP,
@@ -105,3 +107,39 @@ def persistent_drain_ref(ctrl, queue, workspace, carry):
         ctrl_out[c, QC_DRAINED] = drained
     return (jnp.asarray(ws), jnp.asarray(carry), jnp.asarray(acks),
             jnp.asarray(results), jnp.asarray(ctrl_out))
+
+
+def persistent_drain_prof_ref(ctrl, queue, workspace, carry, tick):
+    """Oracle for the flight-recorder kernel (``_drain_kernel_prof``):
+    the bare drain's outputs plus the ``(C, Q, PROF_WIDTH)`` profile
+    rows and the advanced persistent tick counter."""
+    ws, carry_out, acks, results, ctrl_out = persistent_drain_ref(
+        ctrl, queue, workspace, carry)
+    ctrl = np.asarray(ctrl)
+    queue = np.asarray(queue)
+    tick_out = np.array(tick, dtype=np.int32, copy=True)
+    C, Q, _ = queue.shape
+    assert tick_out.shape == (C, 1)
+    prof = np.zeros((C, Q, PROF_WIDTH), np.int32)
+    for c in range(C):
+        head, tail, stop = (int(ctrl[c, QC_HEAD]), int(ctrl[c, QC_TAIL]),
+                            int(ctrl[c, QC_STOP]))
+        drained = 0
+        for i in range(Q):
+            desc = queue[c, i]
+            active = (head <= i < tail and stop == 0
+                      and int(desc[W_STATUS]) >= THREAD_WORK)
+            if not active:
+                continue
+            t0 = int(tick_out[c, 0])
+            prof[c, i, P_TICK0] = t0
+            prof[c, i, P_TICK1] = t0 + 1
+            prof[c, i, P_ROW] = drained
+            prof[c, i, P_QDEPTH] = tail - i
+            prof[c, i, P_OPCODE] = desc[W_OPCODE]
+            prof[c, i, P_REQID] = desc[W_REQID]
+            prof[c, i, P_ACTIVE] = 1
+            tick_out[c, 0] = t0 + 1
+            drained += 1
+    return (ws, carry_out, acks, results, ctrl_out,
+            jnp.asarray(prof), jnp.asarray(tick_out))

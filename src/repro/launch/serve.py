@@ -76,7 +76,25 @@ def main(argv=None):
                          "Chrome/Perfetto trace JSON of the run to PATH "
                          "(also prints the per-opcode latency quantiles "
                          "and the runtime-verification ledger)")
+    ap.add_argument("--metrics-file", default=None, metavar="PATH",
+                    help="attach the continuous metrics registry and pump "
+                         "one JSON-lines sample per interval to PATH (a "
+                         "Prometheus-text sibling PATH.prom is rewritten "
+                         "atomically each sample; tail either with "
+                         "launch/top.py)")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve /metrics (Prometheus text) and "
+                         "/metrics.json from a background HTTP thread on "
+                         "127.0.0.1:PORT (0 picks a free port)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI preset: forces --reduced and clamps request "
+                         "counts so the serve loop (and its metrics "
+                         "exposition) finishes in seconds")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.reduced = True
+        args.requests = min(args.requests, 6)
+        args.max_new = min(args.max_new, 4)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -85,9 +103,15 @@ def main(argv=None):
     params = model.init(jax.random.key(args.seed))
 
     tracker = WcetTracker("serve")
-    # the elastic controller observes load through the telemetry stream,
-    # so --elastic attaches a collector even without --trace
-    collector = TraceCollector() if (args.trace or args.elastic) else None
+    # the elastic controller and the metrics registry both observe load
+    # through the telemetry stream, so --elastic / --metrics-* attach a
+    # collector even without --trace (which also turns the runtimes'
+    # in-kernel flight recorder on — device-stamped chunk spans feed the
+    # per-cluster utilization gauges)
+    want_metrics = args.metrics_file is not None or \
+        args.metrics_port is not None
+    collector = TraceCollector() \
+        if (args.trace or args.elastic or want_metrics) else None
     engine = ServingEngine(model, params, max_batch=args.max_batch,
                            max_seq=args.max_seq, tracker=tracker,
                            completion_window=args.completion_window,
@@ -98,6 +122,14 @@ def main(argv=None):
                            telemetry=collector)
     if args.no_preempt:
         engine.dispatcher.policy.preemptive = False
+    metrics = pump = None
+    if want_metrics:
+        from repro.core.telemetry import MetricsPump, MetricsRegistry
+        metrics = MetricsRegistry(collector)
+        pump = MetricsPump(metrics, path=args.metrics_file,
+                           port=args.metrics_port, interval_s=0.25).start()
+        if args.metrics_port is not None:
+            print(f"[serve] metrics: http://127.0.0.1:{pump.port}/metrics")
     elastic = None
     if args.elastic:
         from repro.core.elastic import ElasticController
@@ -111,6 +143,10 @@ def main(argv=None):
             classes["stream_low"] = OP_STREAM_LOW
         elastic = ElasticController().bind_dispatcher(
             engine.dispatcher, classes)
+        if metrics is not None:
+            # advisory: blend per-cluster device-measured utilization
+            # into the backlog-demand signal driving recarve proposals
+            elastic.bind_metrics(metrics)
         # advisory threading: ride the telemetry stream — every emitted
         # event gives the controller a (rate-limited) chance to evaluate,
         # so the serve loop needs no explicit tick plumbing
@@ -202,6 +238,20 @@ def main(argv=None):
               f"wcet_overruns={mc['wcet_overruns']}")
         n_ev = collector.export_chrome(args.trace)
         print(f"[serve] wrote {n_ev} trace events to {args.trace}")
+    if pump is not None:
+        pump.stop()               # final sample: short runs still export
+        snap = metrics.snapshot()
+        util = metrics.utilization()
+        cells = " ".join(f"cluster{c}={u:.3f}"
+                         for c, u in sorted(util.items()))
+        chunks = sum(v for k, v in snap.items()
+                     if k.startswith("cluster_chunks{"))
+        print(f"[serve] metrics: samples={metrics.samples} "
+              f"device_chunks={chunks:.0f} "
+              f"utilization {cells if cells else '(no device spans)'}")
+        if args.metrics_file:
+            print(f"[serve] metrics written to {args.metrics_file} "
+                  f"(+ .prom sibling)")
     engine.dispose()
     return outs
 

@@ -114,16 +114,18 @@ def main(argv=None) -> int:
     lo_dim = 128 if args.smoke else 384
 
     from repro.core.persistent import PersistentRuntime
+    tc = TraceCollector()
+    # telemetry attached at construction so boot() turns the in-kernel
+    # flight recorder on: chunk spans in the export are device-stamped
     rt = PersistentRuntime(
         [("lo", _lo_fn, jnp.zeros((), jnp.int32)), ("hi", _hi_fn)],
-        result_template=jnp.zeros((1,), jnp.float32), max_inflight=1)
+        result_template=jnp.zeros((1,), jnp.float32), max_inflight=1,
+        telemetry=tc)
     rt.boot(_make_state(lo_dim))
     for op in (0, 1):          # compile both branches out of the timing
         rt.run_sync(mb.WorkDescriptor(opcode=op, arg0=1, request_id=990))
     chunk_us = _calibrate_us(rt, 0)
     hi_us = _calibrate_us(rt, 1)
-
-    tc = TraceCollector()
     classes = (
         ClassSpec(0, "lo", priority=5, criticality=CRIT_LOW,
                   chunk_us=chunk_us * 2),
@@ -134,7 +136,6 @@ def main(argv=None) -> int:
         classes=classes, telemetry=tc,
         wcet_us={0: chunk_us * n_chunks * 2, 1: hi_us * 2},
         wcet_quantile=args.wcet_quantile)
-    rt.telemetry = tc            # runtime-level instants on the same ring
 
     # -- phase 1: the preemption timeline -------------------------------
     print(f"[trace] phase 1: LOW x{n_chunks} chunks "
@@ -176,6 +177,10 @@ def main(argv=None) -> int:
     # -- report + export --------------------------------------------------
     for line in tc.format_table("response_us"):
         print(f"[trace] {line}")
+    cnt = tc.counters()
+    print(f"[trace]   collector health: {len(tc)} events retained, "
+          f"{cnt['dropped_events']} dropped (ring overflow), "
+          f"{cnt['subscriber_error_count']} subscriber errors")
     n_ev = tc.export_chrome(args.out)
     print(f"[trace] wrote {n_ev} trace events to {args.out} "
           f"(load in chrome://tracing or ui.perfetto.dev)")

@@ -1,0 +1,223 @@
+"""Device-side flight recorder: in-kernel profile stamps, the runtimes'
+device-span decode, and the exporter's device tracks.
+
+Three layers under test:
+
+* kernel — ``persistent_drain_prof`` (pallas, interpret) against its
+  numpy oracle, the all-zero inactive-row convention, the persistent
+  logical-tick counter, and the BYTE-IDENTITY of the ack/result outputs
+  between the bare and the profiled drain (turning the recorder on must
+  never change what the scheduler sees);
+* runtime — both ``runtime="scan"`` and ``runtime="mega"`` under a
+  collector re-emit the decoded rows as ``chunk_retire`` spans with
+  ``source=device``, calibrated so each cluster's device timeline is
+  monotone and disjoint;
+* export — device spans land on their own named process track
+  (pid = DEVICE_PID_BASE + cluster), round-trip through the Chrome and
+  CSV exporters next to EV_STREAM events, and the merged host+device
+  view stays parseable JSON.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mailbox as mb
+from repro.core.telemetry import (DEVICE_PID_BASE, EV_CHUNK_RETIRE,
+                                  EV_STREAM, TraceCollector, chrome_trace)
+from repro.kernels.persistent import (OP_MATMUL, OP_NOP, OP_RELU,
+                                      TILE_RESULT_TEMPLATE, pack_args,
+                                      persistent_drain, persistent_drain_prof,
+                                      persistent_drain_prof_ref, tile_state)
+from repro.system import LkSystem
+
+from tests_util_devs import devs
+
+NBUF = 4
+
+
+def _drain_inputs(descs, qlen=8, tail=None, seed=0):
+    ws = np.asarray(tile_state(NBUF, seed=seed)["ws"])[None]
+    ring = mb.descriptor_ring(descs, qlen)[None]
+    ctrl = mb.queue_control(tail=len(descs) if tail is None else tail)[None]
+    carry = np.zeros((1, 1), np.float32)
+    tick = np.zeros((1, 1), np.int32)
+    return ctrl, ring, ws, carry, tick
+
+
+def _mixed_descs():
+    return [
+        mb.WorkDescriptor(opcode=OP_RELU, request_id=11,
+                          arg0=pack_args(1, 0)[0]),
+        mb.WorkDescriptor(opcode=OP_MATMUL, request_id=12,
+                          arg0=pack_args(3, 0, 1)[0],
+                          arg1=pack_args(3, 0, 1)[1]),
+        mb.WorkDescriptor(opcode=OP_NOP, request_id=13),
+        mb.WorkDescriptor(opcode=OP_RELU, request_id=14,
+                          arg0=pack_args(2, 0)[0]),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# kernel layer
+# ---------------------------------------------------------------------------
+def test_prof_kernel_matches_oracle():
+    ctrl, ring, ws, carry, tick = _drain_inputs(_mixed_descs())
+    out = persistent_drain_prof(jnp.asarray(ctrl), jnp.asarray(ring),
+                                jnp.asarray(ws), jnp.asarray(carry),
+                                jnp.asarray(tick), interpret=True)
+    ref = persistent_drain_prof_ref(ctrl, ring, ws, carry, tick)
+    assert len(out) == len(ref) == 7
+    for o, r in zip(out, ref):
+        np.testing.assert_allclose(np.asarray(o), r, rtol=1e-4, atol=1e-4)
+
+
+def test_prof_acks_byte_identical_to_bare():
+    """The recorder must be a pure observer: acks, results, workspace,
+    carry and queue control are byte-identical with and without it."""
+    ctrl, ring, ws, carry, tick = _drain_inputs(_mixed_descs())
+    bare = persistent_drain(jnp.asarray(ctrl), jnp.asarray(ring),
+                            jnp.asarray(ws), jnp.asarray(carry),
+                            interpret=True)
+    prof = persistent_drain_prof(jnp.asarray(ctrl), jnp.asarray(ring),
+                                 jnp.asarray(ws), jnp.asarray(carry),
+                                 jnp.asarray(tick), interpret=True)
+    for b, p in zip(bare, prof[:5]):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(p))
+
+
+def test_prof_rows_and_tick_semantics():
+    descs = _mixed_descs()
+    ctrl, ring, ws, carry, tick = _drain_inputs(descs, tail=3)
+    tick[:] = 7                     # resume mid-stream: ticks persist
+    *_, prof, tick_out = persistent_drain_prof(
+        jnp.asarray(ctrl), jnp.asarray(ring), jnp.asarray(ws),
+        jnp.asarray(carry), jnp.asarray(tick), interpret=True)
+    prof = np.asarray(prof)[0]
+    # rows past the tail are all-zero (the inactive-row convention)
+    assert prof.shape[1] == mb.PROF_WIDTH
+    np.testing.assert_array_equal(prof[3:], 0)
+    active = prof[:3]
+    assert (active[:, mb.P_ACTIVE] == 1).all()
+    # logical ticks: begin/end stamps advance by one per active row,
+    # continuing from the carried-in counter
+    np.testing.assert_array_equal(active[:, mb.P_TICK0], [7, 8, 9])
+    np.testing.assert_array_equal(active[:, mb.P_TICK1], [8, 9, 10])
+    assert int(np.asarray(tick_out)[0, 0]) == 10
+    # row index + queue depth at pop + identity words
+    np.testing.assert_array_equal(active[:, mb.P_ROW], [0, 1, 2])
+    np.testing.assert_array_equal(active[:, mb.P_QDEPTH], [3, 2, 1])
+    np.testing.assert_array_equal(active[:, mb.P_REQID], [11, 12, 13])
+    np.testing.assert_array_equal(
+        active[:, mb.P_OPCODE], [d.opcode for d in descs[:3]])
+
+
+# ---------------------------------------------------------------------------
+# runtime layer: both runtimes emit calibrated device spans
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("runtime", ["scan", "mega"])
+def test_runtime_emits_device_spans(runtime):
+    from repro.core.mega import mega_work_classes
+    tc = TraceCollector()
+    sys_ = LkSystem(
+        devices=devs(2), n_clusters=1, runtime=runtime,
+        max_inflight=8, max_steps=8,
+        state_factory=lambda cl: tile_state(NBUF, seed=2),
+        result_template=TILE_RESULT_TEMPLATE,
+        work_classes=mega_work_classes(),
+        telemetry=tc).boot()
+    try:
+        tickets = [sys_.submit("relu", arg0=pack_args(1, 0)[0])
+                   for _ in range(5)]
+        tickets.append(sys_.submit("matmul", arg0=pack_args(3, 0, 1)[0],
+                                   arg1=pack_args(3, 0, 1)[1]))
+        sys_.drain()
+        assert all(t.done() for t in tickets)
+    finally:
+        sys_.dispose()
+    dev = [e for e in tc.events_of(EV_CHUNK_RETIRE)
+           if e.extra.get("source") == "device"]
+    assert len(dev) == 6, f"{runtime}: expected 6 device spans"
+    # every span carries the decoded profile words
+    for e in dev:
+        for k in ("start_us", "dur_us", "tick", "row", "qdepth"):
+            assert k in e.extra, f"missing {k}"
+        assert e.request_id >= 0 and e.opcode >= 0
+        assert isinstance(e.extra["start_us"], float)   # json-safe
+    # anchor calibration: per-cluster device timeline is monotone and
+    # spans are disjoint (end <= next start), reconstructing the
+    # intra-launch order host timestamps cannot see
+    dev.sort(key=lambda e: e.extra["start_us"])
+    for a, b in zip(dev, dev[1:]):
+        assert a.extra["start_us"] + a.extra["dur_us"] \
+            <= b.extra["start_us"] + 1e-6
+    # ticks are strictly increasing across the whole session
+    ticks = [e.extra["tick"] for e in dev]
+    assert ticks == sorted(ticks) and len(set(ticks)) == len(ticks)
+
+
+# ---------------------------------------------------------------------------
+# export layer (satellite: exporter edge cases)
+# ---------------------------------------------------------------------------
+def _mixed_collector():
+    tc = TraceCollector()
+    tc.set_name(0, "relu")
+    # host-side span + stream lifecycle + device-stamped spans
+    tc.emit(EV_STREAM, request_id=5, opcode=0, phase="open")
+    tc.emit(EV_CHUNK_RETIRE, cluster=0, request_id=5, opcode=0, chunk=0,
+            start_us=1_000.0, dur_us=50.0)
+    tc.emit(EV_CHUNK_RETIRE, cluster=0, request_id=5, opcode=0, chunk=1,
+            source="device", start_us=1_010.0, dur_us=20.0,
+            tick=3, row=0, qdepth=2)
+    tc.emit(EV_CHUNK_RETIRE, cluster=0, request_id=6, opcode=0, chunk=0,
+            source="device", start_us=1_030.0, dur_us=20.0,
+            tick=4, row=1, qdepth=1)
+    tc.emit(EV_STREAM, request_id=5, opcode=0, phase="close")
+    return tc
+
+
+def test_chrome_export_device_tracks(tmp_path):
+    tc = _mixed_collector()
+    path = tmp_path / "trace.json"
+    tc.export_chrome(str(path))
+    doc = json.loads(path.read_text())          # round-trips as JSON
+    evs = doc["traceEvents"]
+    spans = [e for e in evs if e["ph"] == "X"]
+    host = [e for e in spans if e["pid"] < DEVICE_PID_BASE]
+    dev = [e for e in spans if e["pid"] >= DEVICE_PID_BASE]
+    assert len(host) == 1 and len(dev) == 2
+    assert all(e["pid"] == DEVICE_PID_BASE + 0 for e in dev)
+    # device spans stay per-ticket rows and disjoint
+    assert {e["tid"] for e in dev} == {5, 6}
+    dev.sort(key=lambda e: e["ts"])
+    assert dev[0]["ts"] + dev[0]["dur"] <= dev[1]["ts"]
+    # both process tracks are named; EV_STREAM instants survive
+    names = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert "cluster 0" in names and "cluster 0 (device)" in names
+    assert any(e["cat"] == EV_STREAM and e["ph"] == "i" for e in evs)
+
+
+def test_csv_export_device_rows(tmp_path):
+    tc = _mixed_collector()
+    path = tmp_path / "events.csv"
+    assert tc.export_csv(str(path)) == 5
+    lines = path.read_text().strip().splitlines()
+    dev_rows = [ln for ln in lines if "source=device" in ln]
+    assert len(dev_rows) == 2
+    assert all("tick=" in ln and "qdepth=" in ln for ln in dev_rows)
+    stream_rows = [ln for ln in lines[1:]
+                   if ln.startswith(f"{EV_STREAM},")]
+    assert len(stream_rows) == 2 and "phase=open" in stream_rows[0]
+
+
+def test_merged_host_device_timeline_monotone():
+    """After anchor calibration the merged per-cluster view (host spans
+    + device spans) sorts into a single monotone timeline."""
+    tc = _mixed_collector()
+    doc = chrome_trace(tc.events, tc.name_of)
+    spans = sorted((e for e in doc["traceEvents"] if e["ph"] == "X"),
+                   key=lambda e: e["ts"])
+    ts = [e["ts"] for e in spans]
+    assert ts == sorted(ts)
+    assert all(e["ts"] >= 0 and e["dur"] >= 1.0 for e in spans)

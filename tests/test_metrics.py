@@ -1,0 +1,271 @@
+"""Continuous metrics surface: registry instruments, the flight-recorder
+feed, utilization sampling, Prometheus/JSONL exposition, the background
+pump, the collector's bounded error accounting, the elastic
+utilization-bias hook, and the lktop renderer."""
+import json
+import time
+import urllib.request
+import warnings
+
+import pytest
+
+from repro.core.telemetry import (EV_CHUNK_RETIRE, MetricsPump,
+                                  MetricsRegistry, TraceCollector)
+
+
+class FakeClock:
+    def __init__(self, t: int = 1_000_000):
+        self.t = t
+
+    def __call__(self) -> int:
+        return self.t
+
+    def advance(self, us: int) -> None:
+        self.t += us
+
+
+def _feed(tc, cluster, n, dur=100.0, qdepth=2, t0=0.0):
+    for i in range(n):
+        tc.emit(EV_CHUNK_RETIRE, cluster=cluster, request_id=i, opcode=1,
+                chunk=0, source="device", start_us=t0 + i * dur,
+                dur_us=dur, tick=i, row=i, qdepth=qdepth)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_instruments_created_on_first_use_and_labeled():
+    reg = MetricsRegistry()
+    reg.counter("reqs").inc()
+    reg.counter("reqs").inc(2)
+    reg.gauge("depth", cluster=1).set(7)
+    reg.histogram("lat_us", op="relu").record(50.0)
+    snap = reg.snapshot()
+    assert snap["reqs"] == 3.0
+    assert snap["depth{cluster=1}"] == 7.0
+    assert snap["lat_us{op=relu}.count"] == 1
+
+
+def test_device_span_feed_updates_cluster_instruments():
+    tc = TraceCollector()
+    reg = MetricsRegistry(tc)
+    _feed(tc, cluster=0, n=4, dur=100.0, qdepth=3)
+    _feed(tc, cluster=1, n=2, dur=50.0, qdepth=1)
+    # host spans and other kinds must NOT feed the registry
+    tc.emit(EV_CHUNK_RETIRE, cluster=0, request_id=9, opcode=1,
+            start_us=0.0, dur_us=999.0)
+    tc.emit("submit", cluster=0, request_id=9)
+    snap = reg.snapshot()
+    assert snap["cluster_chunks{cluster=0}"] == 4.0
+    assert snap["cluster_busy_us{cluster=0}"] == 400.0
+    assert snap["cluster_chunks{cluster=1}"] == 2.0
+    assert snap["cluster_queue_depth{cluster=0}"] == 3.0
+    assert snap["device_chunk_us{cluster=1}.count"] == 2
+    # unified with the collector's counters surface
+    assert snap["events.chunk_retire"] == 7
+    assert snap["events.submit"] == 1
+    assert "dropped_events" in snap
+
+
+def test_sample_computes_bounded_utilization():
+    clk = FakeClock()
+    tc = TraceCollector(clock=clk)
+    reg = MetricsRegistry(tc, clock=clk)
+    _feed(tc, cluster=0, n=5, dur=100.0)       # 500us busy
+    clk.advance(1_000)
+    snap = reg.sample()                        # 500/1000 = 0.5
+    assert snap["cluster_utilization{cluster=0}"] == pytest.approx(0.5)
+    assert reg.utilization() == {0: pytest.approx(0.5)}
+    # second window: no new work -> utilization decays to 0
+    clk.advance(1_000)
+    snap = reg.sample()
+    assert snap["cluster_utilization{cluster=0}"] == 0.0
+    # overload window clamps to 1.0
+    _feed(tc, cluster=0, n=50, dur=100.0)
+    clk.advance(1_000)
+    snap = reg.sample()
+    assert snap["cluster_utilization{cluster=0}"] == 1.0
+    # the distribution histogram saw every sample (x100 scale)
+    assert snap["cluster_utilization_pct{cluster=0}.count"] == 3
+    assert snap["cluster_utilization_pct{cluster=0}.worst"] == \
+        pytest.approx(100.0)
+
+
+def test_prometheus_text_format():
+    clk = FakeClock()
+    tc = TraceCollector(clock=clk)
+    reg = MetricsRegistry(tc, clock=clk)
+    _feed(tc, cluster=0, n=3)
+    clk.advance(1_000)
+    reg.sample()
+    text = reg.to_prometheus()
+    assert "# TYPE lk_cluster_busy_us counter" in text
+    assert 'lk_cluster_busy_us{cluster="0"} 300' in text
+    assert "# TYPE lk_cluster_utilization gauge" in text
+    assert 'lk_cluster_utilization{cluster="0"}' in text
+    assert 'lk_device_chunk_us{cluster="0",quantile="0.99"}' in text
+    assert 'lk_device_chunk_us_count{cluster="0"} 3' in text
+    assert "lk_collector_events_chunk_retire 3" in text
+    # every sample line is NAME{labels} VALUE
+    for ln in text.strip().splitlines():
+        if ln.startswith("#"):
+            continue
+        name, val = ln.rsplit(" ", 1)
+        float(val)
+        assert name.startswith("lk_")
+    line = json.loads(reg.to_json_line())
+    assert line["cluster_chunks{cluster=0}"] == 3.0
+
+
+def test_pump_writes_jsonl_and_prom_sibling(tmp_path):
+    tc = TraceCollector()
+    reg = MetricsRegistry(tc)
+    _feed(tc, cluster=0, n=3)
+    path = str(tmp_path / "m.jsonl")
+    with MetricsPump(reg, path=path, interval_s=0.02):
+        time.sleep(0.1)
+    lines = [json.loads(ln) for ln in open(path)]
+    assert len(lines) >= 2                     # looped + final flush
+    assert lines[-1]["cluster_chunks{cluster=0}"] == 3.0
+    prom = open(path + ".prom").read()
+    assert 'lk_cluster_utilization{cluster="0"}' in prom
+
+
+def test_pump_http_exposition():
+    tc = TraceCollector()
+    reg = MetricsRegistry(tc)
+    _feed(tc, cluster=0, n=2)
+    pump = MetricsPump(reg, port=0, interval_s=5.0).start()
+    try:
+        base = f"http://127.0.0.1:{pump.port}"
+        body = urllib.request.urlopen(base + "/metrics").read().decode()
+        assert 'lk_cluster_chunks{cluster="0"} 2' in body
+        doc = json.loads(
+            urllib.request.urlopen(base + "/metrics.json").read())
+        assert doc["cluster_chunks{cluster=0}"] == 2.0
+    finally:
+        pump.stop()
+
+
+# ---------------------------------------------------------------------------
+# collector health accounting (bounded errors, warn-once)
+# ---------------------------------------------------------------------------
+def test_subscriber_errors_bounded_exact_count_warn_once():
+    tc = TraceCollector()
+    boom = RuntimeError("boom")
+
+    def bad(_ev):
+        raise boom
+
+    tc.subscribe(bad)
+    n = TraceCollector.SUBSCRIBER_ERROR_WINDOW + 30
+    with warnings.catch_warnings(record=True) as w_err:
+        warnings.simplefilter("always")
+        for i in range(n):
+            tc.emit("submit", request_id=i)
+    warned = [w for w in w_err if "subscriber" in str(w.message)]
+    assert len(warned) == 1                    # warned exactly once
+    assert tc.subscriber_error_count == n      # exact count never loses
+    assert len(tc.subscriber_errors) == \
+        TraceCollector.SUBSCRIBER_ERROR_WINDOW  # window stays bounded
+    assert tc.counters()["subscriber_error_count"] == n
+    assert len(tc) == n                        # no emitted event was lost
+
+
+def test_ring_overflow_warns_once_and_counts():
+    tc = TraceCollector(capacity=4)
+    with warnings.catch_warnings(record=True) as w_err:
+        warnings.simplefilter("always")
+        for i in range(10):
+            tc.emit("submit", request_id=i)
+    warned = [w for w in w_err if "overflow" in str(w.message)]
+    assert len(warned) == 1
+    assert tc.dropped_events == 6
+    assert tc.counters()["dropped_events"] == 6
+
+
+# ---------------------------------------------------------------------------
+# elastic utilization bias
+# ---------------------------------------------------------------------------
+def test_elastic_bind_metrics_biases_demand():
+    from collections import deque
+
+    import numpy as np
+
+    from repro.core import mailbox as mb
+    from repro.core.dispatcher import Dispatcher
+    from repro.core.elastic import ElasticController
+
+    class FakeRuntime:
+        max_inflight = 1
+
+        def __init__(self):
+            self._q = deque()
+
+        def trigger(self, desc):
+            self._q.append(desc)
+
+        def ready(self):
+            return bool(self._q)
+
+        def wait(self):
+            d = self._q.popleft()
+            fg = np.zeros((mb.DESC_WIDTH,), np.int32)
+            fg[mb.W_STATUS] = mb.THREAD_FINISHED
+            fg[mb.W_REQID] = d.request_id
+            return d.request_id, fg
+
+        def dispose(self):
+            pass
+
+    clk = FakeClock()
+    tc = TraceCollector(clock=clk)
+    reg = MetricsRegistry(tc, clock=clk)
+    disp = Dispatcher({0: FakeRuntime(), 1: FakeRuntime()}, clock=clk)
+    disp.pin("a", [0])
+    disp.pin("b", [1])
+    ctl = ElasticController(clock=clk).bind_dispatcher(
+        disp, {"a": 0, "b": 1}).bind_metrics(reg)
+    # cluster 0 (class a) measurably saturated; cluster 1 idle
+    _feed(tc, cluster=0, n=10, dur=100.0)
+    clk.advance(1_000)
+    reg.sample()
+    base = {"a": 100.0, "b": 100.0}
+    biased = ctl._utilization_bias(dict(base))
+    assert biased["a"] == pytest.approx(200.0)      # x (1 + 1.0)
+    assert biased["b"] == pytest.approx(100.0)      # idle: unchanged
+    assert ctl.last_utilization["a"] == pytest.approx(1.0)
+    assert ctl.last_utilization["b"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# lktop renderer
+# ---------------------------------------------------------------------------
+def test_top_render_panel():
+    from repro.launch.top import render
+
+    clk = FakeClock()
+    tc = TraceCollector(clock=clk)
+    reg = MetricsRegistry(tc, clock=clk)
+    _feed(tc, cluster=0, n=5, dur=100.0, qdepth=2)
+    _feed(tc, cluster=1, n=1, dur=10.0)
+    clk.advance(1_000)
+    snap = reg.sample()
+    lines = render(snap)
+    panel = "\n".join(lines)
+    assert "lktop" in panel
+    assert "admission:" in panel and "monitor:" in panel
+    assert "dropped_events=0" in panel
+    cluster_rows = [ln for ln in lines if ln.strip().startswith(("0 ", "1 "))]
+    assert len(cluster_rows) == 2
+    assert "50.0%" in cluster_rows[0]          # 500us busy / 1000us wall
+    assert "#" in cluster_rows[0]              # the bar renders
+
+
+def test_top_demo_stream():
+    from repro.launch.top import _demo_snapshots, render
+
+    snaps = list(_demo_snapshots(3))
+    assert len(snaps) == 3
+    assert render(snaps[-1])                   # renders without error
+    assert any(k.startswith("cluster_chunks{") for k in snaps[-1])
